@@ -1,0 +1,48 @@
+"""Benchmark helpers: subprocess multi-device runs + timing."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from typing import Any, Callable
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(code: str, n_devices: int, timeout: int = 600) -> dict:
+    """Run `code` in a subprocess with n placeholder CPU devices; the code
+    must print one JSON object on its last line."""
+    pre = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        "import sys; sys.path.insert(0, 'src')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", pre + textwrap.dedent(code)],
+        capture_output=True, text=True, cwd=REPO, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def time_call(fn: Callable[[], Any], repeats: int = 5, warmup: int = 2) -> dict:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return {"mean_s": sum(times) / len(times), "min_s": min(times),
+            "max_s": max(times)}
+
+
+# TPU v5e model constants (per chip / per link)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LAT = 1e-6

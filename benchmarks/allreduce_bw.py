@@ -1,0 +1,62 @@
+"""Paper Figs. 4/5 (NCCL all_reduce_perf): AllReduce bus bandwidth by
+message size, single-node vs two-node.
+
+TPU analogue: psum over the mesh.  busbw = 2(n-1)/n · size / t (the NCCL
+convention).  Measured on the 8-device in-process mesh (single-pod
+analogue); derived models the cross-pod case where the pod axis adds a
+2-hop DCN-ish link at pod bandwidth — the paper's ≈2× NIC-topology gap
+appears as the single/multi-pod ratio.
+"""
+from __future__ import annotations
+
+from benchmarks._util import ICI_BW, run_devices
+
+SIZES = [1024, 64 * 1024, 1024 * 1024, 16 * 1024 * 1024, 64 * 1024 * 1024]
+
+CODE = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+n_dev = 8
+mesh = jax.make_mesh((n_dev,), ("x",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rows = {{}}
+for size in {sizes}:
+    n = max(size // 4, n_dev)
+    x = jnp.ones((n_dev, n // n_dev), jnp.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("x")))
+    def f(v):
+        s = jnp.broadcast_to(v.sum(axis=0, keepdims=True), v.shape)
+        return jax.lax.with_sharding_constraint(
+            s, NamedSharding(mesh, P("x")))
+    fn = jax.jit(f)
+    fn(xs).block_until_ready()
+    times = []
+    for _ in range(8):
+        t0 = time.perf_counter()
+        fn(xs).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    rows[str(size)] = min(times)
+print(json.dumps(rows))
+"""
+
+
+def run() -> list[dict]:
+    out = run_devices(CODE.format(sizes=SIZES), 8)
+    rows = []
+    n = 8
+    for size in SIZES:
+        t = out[str(size)]
+        busbw = 2 * (n - 1) / n * size / t
+        # v5e model: ring all-reduce at ICI bw; cross-pod halves the
+        # bottleneck link (one pod-to-pod trunk per ring direction)
+        t_ici = 2 * (n - 1) / n * size / ICI_BW
+        t_xpod = 2 * (n - 1) / n * size / (ICI_BW / 2)
+        rows.append({
+            "name": f"allreduce_bw/size={size}B/single-pod",
+            "us_per_call": t * 1e6,
+            "derived": (f"busbw_GBps={busbw / 1e9:.2f};"
+                        f" v5e_model_us={t_ici * 1e6:.1f};"
+                        f" xpod_model_us={t_xpod * 1e6:.1f}"),
+        })
+    return rows

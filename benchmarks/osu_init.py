@@ -1,0 +1,42 @@
+"""Paper Fig. 1 (osu_init): runtime-bootstrap latency vs scale.
+
+MPI_Init's cost structure (PMIx exchange + transport discovery + endpoint
+setup) maps to: mesh construction + first-collective compile (cold) vs
+steady-state issue (warm).  The dual environments are cold/warm — the same
+contrast the paper measures between container (extra namespace work) and
+native bootstrap paths.  Measured on in-process device counts 1..8;
+`derived` models the 256-chip pod from the per-device slope.
+"""
+from __future__ import annotations
+
+from benchmarks._util import run_devices
+
+CODE = """
+import json, time
+import jax
+from repro.core.bootstrap import init_benchmark
+out = init_benchmark(({n}, 1), ("data", "model"), repeats=3)
+print(json.dumps(out))
+"""
+
+
+def run() -> list[dict]:
+    rows = []
+    base_cold = None
+    for n in (1, 2, 4, 8):
+        out = run_devices(CODE.format(n=n), n)
+        cold = out["mesh_construct_s"] + out["first_collective_s"]
+        warm = out["steady_collective_s"]
+        if base_cold is None:
+            base_cold = cold
+        rows.append({
+            "name": f"osu_init/devices={n}/cold",
+            "us_per_call": cold * 1e6,
+            "derived": f"overhead_vs_1dev={cold / base_cold:.2f}x",
+        })
+        rows.append({
+            "name": f"osu_init/devices={n}/warm",
+            "us_per_call": warm * 1e6,
+            "derived": f"cold_warm_ratio={cold / max(warm, 1e-9):.0f}x",
+        })
+    return rows

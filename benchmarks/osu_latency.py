@@ -1,0 +1,50 @@
+"""Paper Figs. 2/3 (osu_latency): point-to-point latency by message size.
+
+p2p on TPU is collective-permute over one ICI hop.  Measured: 2-device
+in-process mesh (the intra-node/shared-memory analogue).  Derived: the
+v5e ICI model latency (hop latency + size/link bandwidth) — the inter-node
+analogue the paper plots alongside.
+"""
+from __future__ import annotations
+
+from benchmarks._util import ICI_BW, ICI_LAT, run_devices
+
+SIZES = [8, 1024, 16 * 1024, 128 * 1024, 1024 * 1024, 8 * 1024 * 1024]
+
+CODE = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((2,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+rows = {{}}
+for size in {sizes}:
+    n = max(size // 4, 2)
+    x = jnp.zeros((2, n // 2), jnp.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("x")))
+    def f(v):
+        return jax.lax.with_sharding_constraint(
+            jnp.roll(v, 1, axis=0), NamedSharding(mesh, P("x")))
+    fn = jax.jit(f)
+    fn(xs).block_until_ready()
+    times = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        fn(xs).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    rows[str(size)] = min(times)
+print(json.dumps(rows))
+"""
+
+
+def run() -> list[dict]:
+    out = run_devices(CODE.format(sizes=SIZES), 2)
+    rows = []
+    for size in SIZES:
+        measured = out[str(size)]
+        model = ICI_LAT + size / ICI_BW
+        rows.append({
+            "name": f"osu_latency/size={size}B/intra(measured)",
+            "us_per_call": measured * 1e6,
+            "derived": f"ici_model_us={model * 1e6:.2f}",
+        })
+    return rows

@@ -1,0 +1,65 @@
+"""Arbor's published scale, dry-run: the 128 000-cell ring network lowered
+onto a 256-way pod mesh (the workload behind paper Figs 6/7 at the node
+counts the paper actually used).  Proves the BSP spike-exchange program
+compiles at production scale and reports its exchange traffic — one
+all-gather per min-delay epoch, int8 spike flags (§Perf iteration 4:
+4× less exchange traffic than f32 flags).
+"""
+from __future__ import annotations
+
+from benchmarks._util import ICI_BW, run_devices
+
+CODE = """
+import json, time
+import jax
+from repro.neuro.ring import RingConfig
+from repro.neuro.cable import CellConfig
+from repro.neuro.sim import _run_local, shard_map
+from repro.neuro import cable
+from repro.core.inspector import parse_hlo
+
+cfg = RingConfig(n_cells=131072, t_end_ms=200.0, delay_ms=5.0,
+                 cell=CellConfig(n_compartments=32))
+mesh = jax.make_mesh((256,), ("cells",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+n_loc = cfg.n_cells // 256
+run = _run_local(cfg, n_loc, "cells", False)
+spec = jax.sharding.PartitionSpec("cells")
+state_specs = cable.CellState(v=spec, m=spec, h=spec, n=spec, g_syn=spec)
+fn = shard_map(run, mesh=mesh, in_specs=(state_specs,),
+               out_specs=(state_specs, spec, jax.sharding.PartitionSpec()),
+               check_vma=False)
+f32 = jax.numpy.float32
+state_abs = cable.CellState(
+    v=jax.ShapeDtypeStruct((cfg.n_cells, 32), f32),
+    m=jax.ShapeDtypeStruct((cfg.n_cells,), f32),
+    h=jax.ShapeDtypeStruct((cfg.n_cells,), f32),
+    n=jax.ShapeDtypeStruct((cfg.n_cells,), f32),
+    g_syn=jax.ShapeDtypeStruct((cfg.n_cells,), f32))
+t0 = time.time()
+compiled = jax.jit(fn).lower(state_abs).compile()
+rep = parse_hlo(compiled.as_text(), 256)
+m = compiled.memory_analysis()
+mem = (m.argument_size_in_bytes + m.temp_size_in_bytes
+       + m.output_size_in_bytes - m.alias_size_in_bytes)
+print(json.dumps({
+    "compile_s": round(time.time() - t0, 2),
+    "mem_gib": mem / 2**30,
+    "epochs": cfg.n_epochs,
+    "moved_bytes": rep.total_moved_bytes,
+    "counts": rep.counts(),
+}))
+"""
+
+
+def run() -> list[dict]:
+    out = run_devices(CODE, 512, timeout=900)
+    per_epoch = out["moved_bytes"] / max(out["epochs"], 1)
+    return [{
+        "name": "ring_podscale/128k-cells/256-way",
+        "us_per_call": out["compile_s"] * 1e6,
+        "derived": (f"mem_gib={out['mem_gib']:.3f};"
+                    f"allgather_per_epoch_MB={per_epoch/2**20:.1f};"
+                    f"exchange_model_us={per_epoch/ICI_BW*1e6:.0f};"
+                    f"counts={out['counts']}"),
+    }]

@@ -1,0 +1,68 @@
+"""Paper Figs. 6/7 (Arbor ring CPU strong+weak scaling) and Figs. 8/9
+(NEURON ringtest strong+weak): the BSP ring simulation across rank counts.
+
+Strong: fixed total cells, ranks 1..8 (subprocess meshes) — paper Fig 6.
+Weak: fixed cells/rank — paper Fig 7.
+neuron_ringtest: many independent rings (chains), paper Figs 8/9.
+Efficiency definitions match the paper (T1/(N·TN) strong; T1/TN weak).
+"""
+from __future__ import annotations
+
+from benchmarks._util import run_devices
+
+CODE = """
+import json
+import jax
+from repro.neuro.ring import RingConfig
+from repro.neuro.cable import CellConfig
+from repro.neuro.sim import simulate
+cfg = RingConfig(n_cells={cells}, n_rings={rings}, t_end_ms={t_end},
+                 cell=CellConfig(n_compartments={comp}))
+if {ranks} > 1:
+    mesh = jax.make_mesh(({ranks},), ("cells",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    r = simulate(cfg, mesh=mesh)
+else:
+    r = simulate(cfg)
+print(json.dumps({{"wall_s": r.wall_s, "spikes": r.total_spikes}}))
+"""
+
+
+def _sweep(name: str, cells_fn, rings: int, t_end: float,
+           comp: int = 8) -> list[dict]:
+    rows = []
+    t1 = None
+    for ranks in (1, 2, 4, 8):
+        cells = cells_fn(ranks)
+        out = run_devices(
+            CODE.format(cells=cells, rings=rings, t_end=t_end, comp=comp,
+                        ranks=ranks), ranks)
+        wall = out["wall_s"]
+        if ranks == 1:
+            t1 = wall
+        if "strong" in name:
+            eff = t1 / (ranks * wall)
+        else:
+            eff = t1 / wall
+        rows.append({
+            "name": f"{name}/ranks={ranks}",
+            "us_per_call": wall * 1e6,
+            "derived": f"cells={cells};spikes={out['spikes']};"
+                       f"efficiency={eff:.2f}",
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    rows = []
+    # Fig 6: Arbor ring strong scaling (fixed problem)
+    rows += _sweep("arbor_ring/strong", lambda r: 2048, rings=1, t_end=20.0)
+    # Fig 7: Arbor ring weak scaling (cells grow with ranks)
+    rows += _sweep("arbor_ring/weak", lambda r: 256 * r, rings=1, t_end=20.0)
+    # Fig 8: NEURON ringtest strong (many independent rings)
+    rows += _sweep("neuron_ringtest/strong", lambda r: 2048, rings=16,
+                   t_end=20.0, comp=4)
+    # Fig 9: NEURON ringtest weak
+    rows += _sweep("neuron_ringtest/weak", lambda r: 256 * r, rings=8,
+                   t_end=20.0, comp=4)
+    return rows

@@ -1,0 +1,175 @@
+"""§Roofline: the three-term analysis per (arch × shape × mesh) from the
+dry-run's compiled artifacts (launch/dryrun.py JSON records).
+
+  compute    = HLO_dot_flops(per-device, loop-trip-weighted) / peak_FLOP/s
+  memory     = HLO_bytes(per-device, fusion-optimistic model) / HBM_bw
+  collective = moved_bytes(per-device, ring model)          / ICI link bw
+
+Sources: inspector.hlo_cost (XLA's own cost_analysis counts while bodies
+once — see inspector docstring) and inspector.parse_hlo.  The dominant term
+is the bottleneck; MODEL_FLOPS/HLO_FLOPs shows how much compiled compute is
+"useful" (remat + causal-mask waste + padding appear here).  Writes
+EXPERIMENTS/roofline.csv + .md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks._util import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = Path("EXPERIMENTS/dryrun")
+
+# assignment-table attention geometry needed for the analytic score-traffic
+# estimate (kept minimal: heads after run-padding at tp=16)
+_ATTN = {  # arch -> (n_layers_with_self_attn, H_run@tp16)
+    "llama-3.2-vision-11b": (40, 32), "phi3-mini-3.8b": (32, 32),
+    "phi3-medium-14b": (40, 80), "deepseek-7b": (30, 32),
+    "deepseek-coder-33b": (62, 64), "qwen3-moe-30b-a3b": (48, 32),
+    "granite-moe-1b-a400m": (24, 16), "whisper-medium": (48, 16),
+    "zamba2-2.7b": (9, 32),
+}
+
+
+def attn_score_bytes_per_dev(rec: dict) -> float:
+    """HBM traffic of materialized attention scores the flash kernel keeps
+    in VMEM: per layer per pass, write+read of fp32 scores + probs
+    ~ 3 · B·H·S² · 4B, sharded over all devices; train runs 3 passes
+    (fwd, remat-fwd, bwd), prefill 1."""
+    arch = rec["arch"]
+    if arch not in _ATTN:
+        return 0.0
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    layers, h_run = _ATTN[arch]
+    shape = rec["shape"]
+    if shape == "train_4k":
+        b, s, passes = 256, 4096, 3
+    elif shape == "prefill_32k":
+        b, s, passes = 32, 32768, 1
+    else:
+        return 0.0
+    mb = max(rec.get("microbatches", 0), 1)
+    # causal: ~S²/2 scored pairs; 3 array traversals (write scores, read
+    # for softmax-normalized probs, read probs for the AV matmul)
+    total = passes * layers * 3.0 * b * h_run * (s * s / 2) * 4.0
+    return total / n_dev
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D total (N = active non-embedding params; D = tokens processed).
+    train counts fwd+bwd (6ND); prefill/decode fwd only (2ND)."""
+    n = rec["params_nonembed_active"]
+    shape = rec["shape"]
+    if shape == "train_4k":
+        tokens, factor = 256 * 4096, 6.0
+    elif shape == "prefill_32k":
+        tokens, factor = 32 * 32768, 2.0
+    elif shape == "decode_32k":
+        tokens, factor = 128 * 1, 2.0
+    else:  # long_500k decode
+        tokens, factor = 1 * 1, 2.0
+    return factor * n * tokens
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    hc = rec["hlo_cost"]
+    coll = rec["collectives"]["total_moved_bytes"]
+    coll_adj = rec["collectives"].get("tpu_adjusted_moved_bytes", coll)
+    t_c = hc["dot_flops"] / PEAK_FLOPS
+    t_m = hc["bytes"] / HBM_BW
+    t_x = coll / ICI_BW
+    t_x_adj = coll_adj / ICI_BW  # f32 promotion on XLA:CPU halved (inspector)
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_x_adj), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    useful = mf / n_dev / max(hc["dot_flops"], 1e-9)
+    step_time = max(t_c, t_m, t_x_adj)  # no-overlap bound on the max term
+    mfu = (mf / n_dev / max(step_time, 1e-12)) / PEAK_FLOPS
+    mfu_raw = (mf / n_dev / max(max(t_c, t_m, t_x), 1e-12)) / PEAK_FLOPS
+    # what the flash kernel buys: score blocks stay in VMEM
+    t_m_kernel = max(hc["bytes"] - attn_score_bytes_per_dev(rec), 0) / HBM_BW
+    mfu_kernel = (mf / n_dev / max(max(t_c, t_m_kernel, t_x_adj), 1e-12)) / PEAK_FLOPS
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "rules": rec.get("rules", "auto"), "microbatches": rec.get("microbatches", 0),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "collective_adj_s": t_x_adj,
+        "dominant": dominant[0],
+        "model_flops_total": mf,
+        "useful_ratio": useful,
+        "roofline_mfu": mfu,
+        "roofline_mfu_raw": mfu_raw,
+        "memory_kernel_s": t_m_kernel,
+        "roofline_mfu_kernel": mfu_kernel,
+        "mem_gib": rec.get("memory", {}).get("per_device_total", 0) / 2**30,
+        "fits_hbm": rec.get("memory", {}).get("per_device_total", 0) <= 16 * 2**30,
+    }
+
+
+def improvement_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("restructure block-boundary reductions (reduce-scatter in "
+                "place of the fp32 all-reduce GSPMD emits) / overlap "
+                "gathers with the scan body")
+    if d == "memory":
+        return ("flash/SSD kernels keep score blocks in VMEM; shrink "
+                "saved-activation stack (more microbatches or offload)")
+    return "raise arithmetic intensity: bigger per-device tiles, less remat"
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / pattern))):
+        rec = json.loads(Path(f).read_text())
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def write_tables(rows: list[dict]) -> None:
+    out = Path("EXPERIMENTS")
+    out.mkdir(exist_ok=True)
+    cols = ["arch", "shape", "mesh", "rules", "microbatches", "compute_s",
+            "memory_s", "memory_kernel_s", "collective_s",
+            "collective_adj_s", "dominant", "useful_ratio", "roofline_mfu",
+            "roofline_mfu_raw", "roofline_mfu_kernel", "mem_gib",
+            "fits_hbm"]
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    (out / "roofline.csv").write_text("\n".join(lines) + "\n")
+
+    md = ["| arch | shape | mesh | compute s | memory s | collective s "
+          "(tpu-adj) | dominant | useful | MFU bound | mem GiB | fits |",
+          "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} ({r['collective_adj_s']:.3f}) "
+            f"| **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_mfu']:.1%} "
+            f"| {r['mem_gib']:.1f} | {'y' if r['fits_hbm'] else 'NO'} |")
+    (out / "roofline.md").write_text("\n".join(md) + "\n")
+
+
+def run() -> list[dict]:
+    recs = load_records()
+    rows = [analyze(r) for r in recs]
+    write_tables(rows)
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": max(r["compute_s"], r["memory_s"],
+                               r["collective_s"]) * 1e6,
+            "derived": (f"dom={r['dominant']};mfu_bound={r['roofline_mfu']:.3f};"
+                        f"useful={r['useful_ratio']:.2f};"
+                        f"fits={'y' if r['fits_hbm'] else 'n'}"),
+        })
+    return out

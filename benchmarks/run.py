@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §10).
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only roofline,osu_init,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = [
+    ("roofline", "benchmarks.roofline"),          # §Roofline (from dry-run)
+    ("osu_init", "benchmarks.osu_init"),          # Fig 1
+    ("osu_latency", "benchmarks.osu_latency"),    # Figs 2/3
+    ("allreduce_bw", "benchmarks.allreduce_bw"),  # Figs 4/5
+    ("ring_scaling", "benchmarks.ring_scaling"),  # Figs 6/7 + 8/9
+    ("ring_accel", "benchmarks.ring_accel"),      # Figs 10/11
+    ("ring_podscale", "benchmarks.ring_podscale"),  # Figs 6/7 at paper scale (dry-run)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} suite(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (slots, TTFT, occupancy).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import json
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    res = serve("deepseek-7b", n_requests=8, slots=4, max_len=96, max_new=12)
+    print(json.dumps(res, indent=1))
+    assert res["served"] == 8
+    print("OK")

@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~20M-parameter dense LM for a few hundred
+steps with the full production substrate — data pipeline, AdamW, remat,
+checkpointing, manifest attestation, straggler tracking.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+(Scale note: this container is one CPU core; the 20M config keeps a few
+hundred steps in the tens of minutes.  On a real pod the same driver with
+``--production-mesh --full`` trains the assigned full configs.)
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import ALL_ARCHS
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--out", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~20M-parameter member of the phi3 (dense) family
+    import repro.core.registry as registry
+    base = ALL_ARCHS["phi3-mini-3.8b"]
+    small = dataclasses.replace(
+        base, name="phi3-20m", n_layers=6, d_model=384, n_heads=6,
+        n_kv_heads=6, head_dim=64, d_ff=1024, vocab_size=8192)
+    registry.ALL_ARCHS = dict(ALL_ARCHS)  # leave the global registry alone
+
+    # route through the launcher by monkey-free direct call:
+    from repro.launch import train as T
+
+    orig = T.resolve_arch
+    T.resolve_arch = lambda name: small if name == "phi3-20m" else orig(name)
+    try:
+        res = train("phi3-20m", smoke=False, steps=args.steps,
+                    seq_len=64, global_batch=4, ckpt_every=max(args.steps // 4, 1),
+                    out_dir=args.out)
+    finally:
+        T.resolve_arch = orig
+    print(json.dumps(res, indent=1, default=str))
+    assert res["loss_decreased"], "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

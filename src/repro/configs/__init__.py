@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    SHAPES,
+    SINGLE_POD,
+    MULTI_POD,
+    TINY_MESH,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+    reduced,
+)
+from repro.configs.archs import ALL_ARCHS, SUBQUADRATIC, applicable_shapes
+
+__all__ = [
+    "SHAPES", "SINGLE_POD", "MULTI_POD", "TINY_MESH",
+    "MeshConfig", "ModelConfig", "RunConfig", "ShapeConfig", "TrainConfig",
+    "reduced", "ALL_ARCHS", "SUBQUADRATIC", "applicable_shapes",
+]

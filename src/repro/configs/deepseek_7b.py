@@ -1,0 +1,4 @@
+"""Config module for --arch deepseek-7b (assignment table)."""
+from repro.configs.archs import DEEPSEEK_7B as CONFIG
+
+CONFIG = CONFIG

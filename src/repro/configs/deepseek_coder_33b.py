@@ -1,0 +1,4 @@
+"""Config module for --arch deepseek-coder-33b (assignment table)."""
+from repro.configs.archs import DEEPSEEK_CODER_33B as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,4 @@
+"""Config module for --arch granite-moe-1b-a400m (assignment table)."""
+from repro.configs.archs import GRANITE_MOE_1B_A400M as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,4 @@
+"""Config module for --arch qwen3-moe-30b-a3b (assignment table)."""
+from repro.configs.archs import QWEN3_MOE_30B_A3B as CONFIG
+
+CONFIG = CONFIG

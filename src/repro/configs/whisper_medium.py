@@ -1,0 +1,4 @@
+"""Config module for --arch whisper-medium (assignment table)."""
+from repro.configs.archs import WHISPER_MEDIUM as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,23 @@
+"""The paper's contribution, TPU-native (DESIGN.md §2):
+
+  manifest    — environment encapsulation + late host binding (the image)
+  bootstrap   — PMIx-analogue wire-up + init microbenchmark
+  inspector   — HLO collective-pathway analysis (debug-log parsing, automated)
+  verify      — dual-environment statistical comparison
+  diagnostics — findings -> CI gate
+  registry    — --arch resolution over the assigned architecture pool
+"""
+from repro.core.bootstrap import WireUp, init_benchmark, init_distributed
+from repro.core.diagnostics import Diagnostics
+from repro.core.inspector import TransportReport, hlo_cost, parse_hlo
+from repro.core.manifest import HostBinding, Manifest, PortableEnv, diff
+from repro.core.registry import all_cells, resolve_arch, resolve_shape
+from repro.core.verify import (DualEnvHarness, DualEnvReport,
+                               constant_vs_scaling_overhead)
+
+__all__ = [
+    "WireUp", "init_benchmark", "init_distributed", "Diagnostics",
+    "TransportReport", "hlo_cost", "parse_hlo", "HostBinding", "Manifest",
+    "PortableEnv", "diff", "all_cells", "resolve_arch", "resolve_shape",
+    "DualEnvHarness", "DualEnvReport", "constant_vs_scaling_overhead",
+]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused Hodgkin–Huxley soma update.
+
+The inner loop of the Arbor/NEURON workload: per dt step, every cell's
+gates (m, h, n) and soma voltage advance by exponential Euler.  It is
+VPU-bound (transcendental-heavy, no matmul), so the kernel's job is to
+fuse the ~40 elementwise ops into one VMEM-resident pass over the cell
+block instead of XLA's many HBM round-trips.
+
+Layout: cells reshaped to [rows, 128] so blocks are (8k, 128) —
+hardware-aligned for the 8×128 VPU lanes.  One grid step per row block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# HH constants (must match neuro/cable.py — ref.py asserts this)
+C_M = 1.0
+G_NA, E_NA = 120.0, 50.0
+G_K, E_K = 36.0, -77.0
+G_L, E_L = 0.3, -54.4
+E_SYN = 0.0
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _vtrap(x, y):
+    return jnp.where(jnp.abs(x / y) < 1e-6,
+                     y * (1 - x / y / 2), x / (jnp.exp(x / y) - 1.0))
+
+
+def _hh_kernel(v_ref, m_ref, h_ref, n_ref, g_ref, iax_ref, iext_ref,
+               vo_ref, mo_ref, ho_ref, no_ref, *, dt: float):
+    v0 = v_ref[...]
+    m, h, n = m_ref[...], h_ref[...], n_ref[...]
+    g_syn = g_ref[...]
+    i_axial, i_ext = iax_ref[...], iext_ref[...]
+
+    a_m = 0.1 * _vtrap(-(v0 + 40.0), 10.0)
+    b_m = 4.0 * jnp.exp(-(v0 + 65.0) / 18.0)
+    a_h = 0.07 * jnp.exp(-(v0 + 65.0) / 20.0)
+    b_h = 1.0 / (jnp.exp(-(v0 + 35.0) / 10.0) + 1.0)
+    a_n = 0.01 * _vtrap(-(v0 + 55.0), 10.0)
+    b_n = 0.125 * jnp.exp(-(v0 + 65.0) / 80.0)
+
+    def gate(x, a, b):
+        tau = 1.0 / (a + b)
+        inf = a * tau
+        return inf + (x - inf) * jnp.exp(-dt / tau)
+
+    m_n = gate(m, a_m, b_m)
+    h_n = gate(h, a_h, b_h)
+    n_n = gate(n, a_n, b_n)
+
+    g_na = G_NA * (m_n * m_n * m_n) * h_n
+    g_k = G_K * (n_n * n_n * n_n * n_n)
+    g_tot = g_na + g_k + G_L + g_syn
+    i_inf = (g_na * E_NA + g_k * E_K + G_L * E_L + g_syn * E_SYN
+             + i_axial + i_ext)
+    v_inf = i_inf / g_tot
+    v_n = v_inf + (v0 - v_inf) * jnp.exp(-dt * g_tot / C_M)
+
+    vo_ref[...] = v_n
+    mo_ref[...] = m_n
+    ho_ref[...] = h_n
+    no_ref[...] = n_n
+
+
+def hh_step_pallas(v0, m, h, n, g_syn, i_axial, i_ext, *, dt: float,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False):
+    """[N]-shaped f32 inputs; returns (v, m, h, n) updated.  Pads N up to a
+    whole number of (block_rows × 128) tiles."""
+    n_cells = v0.shape[0]
+    tile = block_rows * LANE
+    n_pad = (n_cells + tile - 1) // tile * tile
+
+    def prep(x):
+        x = jnp.asarray(x, jnp.float32)
+        if n_pad != n_cells:
+            x = jnp.pad(x, (0, n_pad - n_cells))
+        return x.reshape(n_pad // LANE, LANE)
+
+    args = [prep(x) for x in
+            (v0, m, h, n, g_syn, i_axial,
+             jnp.broadcast_to(i_ext, v0.shape))]
+    rows = n_pad // LANE
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out_sds = jax.ShapeDtypeStruct((rows, LANE), jnp.float32)
+
+    outs = pl.pallas_call(
+        functools.partial(_hh_kernel, dt=dt),
+        grid=grid,
+        in_specs=[spec] * 7,
+        out_specs=[spec] * 4,
+        out_shape=[out_sds] * 4,
+        interpret=interpret,
+    )(*args)
+    return tuple(o.reshape(n_pad)[:n_cells] for o in outs)

@@ -1,0 +1,38 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; on CPU they execute in
+interpret mode (the kernel body runs in Python per grid step) — that is
+the validation path this container supports.  Model code calls these via
+``use_pallas=True``; the default model path uses the jnp oracles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hh_neuron import hh_step_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hh_step(v0, m, h, n, g_syn, i_axial, dt, i_ext):
+    """Signature-compatible with neuro.cable.hh_soma_update."""
+    return hh_step_pallas(v0, m, h, n, g_syn, i_axial, i_ext,
+                          dt=float(dt), interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def ssd_scan(x, dt, a, b_in, c_in, chunk: int):
+    return ssd_scan_pallas(x, dt, a, b_in, c_in, chunk,
+                           interpret=_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are THE reference semantics: model code uses them by default (the
+portable path), kernels must match them (tests/test_kernels.py sweeps
+shapes/dtypes with assert_allclose), and the dual-environment harness
+(core/verify.py) treats (oracle, kernel) as its two environments —
+the repo-level analogue of the paper's native-vs-container comparison.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+from repro.neuro.cable import hh_soma_update
+
+
+def hh_step_ref(v0, m, h, n, g_syn, i_axial, i_ext, *, dt: float):
+    """Oracle for kernels/hh_neuron.py — delegates to the model's own
+    update (single source of truth for the HH math)."""
+    f32 = jnp.float32
+    return hh_soma_update(
+        jnp.asarray(v0, f32), jnp.asarray(m, f32), jnp.asarray(h, f32),
+        jnp.asarray(n, f32), jnp.asarray(g_syn, f32),
+        jnp.asarray(i_axial, f32), dt, jnp.asarray(i_ext, f32))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """Oracle for kernels/flash_attention.py: plain softmax attention.
+    q, k, v: [BH, S, D]."""
+    bh, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b_in, c_in, chunk: int):
+    """Oracle for kernels/ssd_scan.py — the model's chunked jnp SSD."""
+    return ssd_chunked(x, dt, a, b_in, c_in, min(chunk, x.shape[1]))
+
+
+def ssd_sequential_ref(x, dt, a, b_in, c_in):
+    """Second, independent oracle: the O(S·N·P) sequential recurrence the
+    SSD algorithm must equal (validates the chunked oracle itself)."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    hg = h // g
+    f32 = jnp.float32
+    bh = jnp.repeat(b_in.astype(f32), hg, axis=2)   # [B,S,H,N]
+    ch = jnp.repeat(c_in.astype(f32), hg, axis=2)
+    dtf = dt.astype(f32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        da = jnp.exp(dtt * a)
+        state = (state * da[..., None, None]
+                 + (dtt[..., None] * xt)[..., None] * bt[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), f32)
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bh, 1, 0), jnp.moveaxis(ch, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

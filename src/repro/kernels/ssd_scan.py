@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Per (batch, head) the sequence splits into chunks of Q tokens.  Each grid
+step computes the chunk's quadratic intra-chunk term on the MXU
+(C·Bᵀ ⊙ decay masks — [Q,Q]×[Q,P] matmuls) and carries the [P,N] SSM
+state across chunks in VMEM scratch (the chunk axis is sequential).
+This is the TPU-native expression of the state-space duality: the paper's
+GPU kernel tiles over SMs; here the chunk is sized so (x, B, C, CB, state)
+fit VMEM and the [Q,Q]@[Q,P] / [Q,N]@[N,P] contractions are MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref,
+                state_ref, *, n_chunks: int):
+    cb_idx = pl.program_id(2)
+
+    @pl.when(cb_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # [Q]
+    a = a_ref[0]                                   # scalar
+    b = b_ref[0, :, 0, :].astype(jnp.float32)      # [Q, N]
+    c = c_ref[0, :, 0, :].astype(jnp.float32)      # [Q, N]
+
+    da = dt * a                                    # [Q]
+    seg = jnp.cumsum(da)                           # [Q]
+
+    # intra-chunk: (C Bᵀ ⊙ L ⊙ dt_k) x
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    decay = jnp.exp(seg[:, None] - seg[None, :])
+    q = seg.shape[0]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    m = jnp.where(tri, cb * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q,P]
+
+    # inter-chunk: C_q exp(seg_q) · S_prev
+    state = state_ref[...]                         # [P, N]
+    c_scaled = c * jnp.exp(seg)[:, None]           # [Q, N]
+    y += jax.lax.dot_general(c_scaled, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,P]
+
+    # state update: S = S·exp(sum da) + xᵀ (B ⊙ w_k)
+    w_k = jnp.exp(seg[-1] - seg) * dt              # [Q]
+    bw = b * w_k[:, None]                          # [Q, N]
+    contrib = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # [P,N]
+    state_ref[...] = state * jnp.exp(seg[-1]) + contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(cb_idx == n_chunks - 1)
+    def _fin():
+        fin_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_pallas(x, dt, a, b_in, c_in, chunk: int, *,
+                    interpret: bool = False):
+    """x: [B,S,H,P], dt: [B,S,H] f32, a: [H] f32, b_in/c_in: [B,S,G,N]
+    (groups broadcast to heads by the wrapper).  Returns
+    (y [B,S,H,P], final_state [B,H,P,N] f32)."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g
+
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bi, hi, ci, hg=hg: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bi, hi, ci, hg=hg: (bi, ci, hi // hg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, jnp.asarray(dt, jnp.float32), jnp.asarray(a, jnp.float32),
+      b_in, c_in)
+    return y, fin

@@ -1,0 +1,97 @@
+"""Late binding of a portable (model, shape, rules) description onto a
+physical mesh: NamedSharding trees for state, batches and caches.
+
+This module is the TPU analogue of the paper's PMIx wire-up — the image
+(model code + config) is host-agnostic; ``bind_*`` attaches the
+site-specific topology at launch time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models import params as P
+from repro.models.model import Model
+from repro.optim.adamw import OptState
+from repro.parallel import ctx as shardctx
+from repro.train.step import TrainState
+
+_BATCH_AXES: dict[str, tuple[str | None, ...]] = {
+    "tokens": ("act_batch", "act_seq"),
+    "labels": ("act_batch", "act_seq"),
+    "token": ("act_batch", None),
+    "pos": ("act_batch",),
+    "image_embed": ("act_batch", None, None),
+    "audio_embed": ("act_batch", "act_seq", None),
+}
+
+
+def batch_shardings(model: Model, shape: ShapeConfig, mesh) -> dict[str, Any]:
+    specs = model.input_specs(shape)
+    out = {}
+    for name, sds in specs.items():
+        logical = _BATCH_AXES[name]
+        out[name] = NamedSharding(mesh, shardctx.resolve(logical, sds.shape))
+    return out
+
+
+def param_shardings(model: Model, mesh):
+    return P.shardings(model.param_specs(), mesh)
+
+
+def state_shardings(model: Model, mesh) -> TrainState:
+    ps = param_shardings(model, mesh)
+    return TrainState(
+        params=ps,
+        opt=OptState(step=NamedSharding(mesh, PS()), master=ps, m=ps, v=ps),
+    )
+
+
+def cache_shardings(model: Model, mesh, batch: int, seq_len: int):
+    return P.shardings(model.cache_specs(batch, seq_len), mesh)
+
+
+def _logits_sharding(model: Model, mesh, batch: int):
+    spec = shardctx.resolve(("act_batch", "act_vocab"),
+                            (batch, model.cfg.padded_vocab))
+    return NamedSharding(mesh, spec)
+
+
+def abstract_cell(model: Model, run: RunConfig, mesh):
+    """(fn, abstract_args, in_shardings, out_shardings, donate) for one
+    assignment cell — ready for jax.jit(...).lower(...).  Explicit
+    out_shardings pin the state/cache layouts so donation aliases cleanly
+    and XLA cannot decide to materialize replicated state."""
+    from repro.train.step import abstract_train_state, make_train_step
+
+    shape = run.shape
+    if shape.kind == "train":
+        step = make_train_step(model, run)
+        args = (abstract_train_state(model), model.input_specs(shape))
+        st_sh = state_shardings(model, mesh)
+        shards = (st_sh, batch_shardings(model, shape, mesh))
+        return step, args, shards, (st_sh, None), (0,)
+    if shape.kind == "prefill":
+        fn = lambda params, batch: model.prefill(params, batch)
+        args = (model.abstract_params(), model.input_specs(shape))
+        shards = (param_shardings(model, mesh),
+                  batch_shardings(model, shape, mesh))
+        prompt = (model.cfg.decoder_train_len
+                  if model.cfg.family == "encdec" else shape.seq_len)
+        out = (_logits_sharding(model, mesh, shape.global_batch),
+               cache_shardings(model, mesh, shape.global_batch, prompt))
+        return fn, args, shards, out, ()
+    # decode
+    fn = model.decode_step
+    inputs = model.input_specs(shape)
+    cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+    args = (model.abstract_params(), cache, inputs["token"], inputs["pos"])
+    bsh = batch_shardings(model, shape, mesh)
+    c_sh = cache_shardings(model, mesh, shape.global_batch, shape.seq_len)
+    shards = (param_shardings(model, mesh), c_sh, bsh["token"], bsh["pos"])
+    out = (_logits_sharding(model, mesh, shape.global_batch), c_sh)
+    return fn, args, shards, out, (1,)

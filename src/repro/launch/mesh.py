@@ -1,0 +1,27 @@
+"""Mesh construction.  Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes, axis_types=_auto(len(cfg.axes)))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    from repro.configs.base import MULTI_POD, SINGLE_POD
+
+    return MULTI_POD if multi_pod else SINGLE_POD

@@ -1,0 +1,393 @@
+"""Prefill and single-token decode paths with per-family cache layouts.
+
+Cache shapes depend on the bound mesh (kv heads zero-padded to the model-
+axis width so the cache itself shards) — so ``cache_specs`` must be called
+under a bound shard context, mirroring the paper's late host binding.
+
+decode shapes from the assignment lower ``decode_step`` (one new token
+against a seq_len-deep cache), not ``train_step``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.models.attention import (decode_attention, full_attention,
+                                    tp_size)
+from repro.models.layers import (embed_tokens, gelu_mlp, head_geom,
+                                 logits_from, rmsnorm, sinusoidal_positions,
+                                 swiglu)
+from repro.models.moe import moe_ffn
+from repro.models.ssm import conv_channels, mamba_decode
+from repro.models.stack import _cross_block, _encoder, _res
+from repro.parallel.ctx import constrain
+
+
+def _kv_cache_spec(cfg: ModelConfig, layers: int, b: int, s: int) -> dict:
+    geom = head_geom(cfg, tp_size())
+    shape = (layers, b, s, geom.n_kv, geom.head_dim)
+    if geom.n_kv % max(geom.tp, 1) == 0:
+        # kv heads divide the model axis: shard the head dim (local scores)
+        axes = ("layers", "cache_batch", "cache_seq", "cache_kv", None)
+    else:
+        # GQA with few kv heads: shard the SEQUENCE dim over the model axis
+        # instead of padding heads — zero memory waste; softmax stats and
+        # the [B,H,hd] partial-output reduce are the only collectives.
+        axes = ("layers", "cache_batch", "cache_seq_tp", None, None)
+    return {
+        "k": P.ParamSpec(shape, axes, init="zeros"),
+        "v": P.ParamSpec(shape, axes, init="zeros"),
+    }
+
+
+def _ssm_cache_spec(cfg: ModelConfig, layers: int, b: int) -> dict:
+    cc = conv_channels(cfg)
+    return {
+        "conv": P.ParamSpec((layers, b, cfg.conv_width - 1, cc),
+                            ("layers", "cache_batch", None, "act_inner"),
+                            init="zeros"),
+        "ssm": P.ParamSpec(
+            (layers, b, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            ("layers", "cache_batch", "cache_kv", None, None),
+            jnp.float32, init="zeros"),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict[str, Any]:
+    """Cache ParamSpec tree for a decode step at the given geometry."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"self": _kv_cache_spec(cfg, cfg.n_layers, batch, seq_len)}
+    if fam == "ssm":
+        return {"ssm": _ssm_cache_spec(cfg, cfg.n_layers, batch)}
+    if fam == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        n_mamba = groups * (cfg.attn_every - 1)
+        return {
+            "ssm": _ssm_cache_spec(cfg, n_mamba, batch),
+            "self": _kv_cache_spec(cfg, groups, batch, seq_len),
+        }
+    if fam == "vlm":
+        groups = cfg.n_layers // cfg.cross_every
+        return {
+            "self": _kv_cache_spec(cfg, cfg.n_layers, batch, seq_len),
+            "cross": _kv_cache_spec(cfg, groups, batch, cfg.n_image_tokens),
+        }
+    if fam == "encdec":
+        return {
+            "self": _kv_cache_spec(cfg, cfg.n_layers, batch, seq_len),
+            "cross": _kv_cache_spec(cfg, cfg.n_layers, batch,
+                                    cfg.n_audio_frames),
+        }
+    raise ValueError(fam)
+
+
+# ================================================================= prefill
+
+
+def _prefill_attn(cfg, p, x, pos0=0):
+    """full attention that also emits (k, v) for the cache."""
+    y, (k, v) = full_attention(cfg, p, x, pos0=pos0, return_kv=True)
+    return y, k, v
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            cache_len: int | None = None):
+    """Returns (last-position logits [B,Vpad], cache).  ``cache_len`` > prompt
+    pre-allocates decode headroom (engine never reallocates mid-stream)."""
+    fam = cfg.family
+    geom = head_geom(cfg, tp_size()) if cfg.n_heads else None
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+
+    if fam in ("dense", "moe"):
+        x = _res(embed_tokens(params["embed"], tokens))
+
+        def body(x, p):
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            a, k, v = _prefill_attn(cfg, p["attn"], h)
+            x = x + a
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if fam == "moe":
+                y, _ = moe_ffn(cfg, p["moe"], h2)
+            else:
+                y = swiglu(p["mlp"], h2)
+            return _res(x + y), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"self": {"k": ks, "v": vs}}
+    elif fam == "ssm":
+        from repro.models.ssm import mamba_block_cp
+        x = _res(embed_tokens(params["embed"], tokens))
+
+        def body(x, p):
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, (conv_tail, ssm_state) = mamba_block_cp(
+                cfg, p["mamba"], h, return_state=True)
+            return _res(x + y), (conv_tail, ssm_state)
+
+        x, (convs, ssms) = jax.lax.scan(body, x, params["layers"])
+        cache = {"ssm": {"conv": convs, "ssm": ssms}}
+    elif fam == "vlm":
+        groups = cfg.n_layers // cfg.cross_every
+        per = cfg.cross_every
+        img = constrain(batch["image_embed"], ("act_batch", None, None))
+        x = embed_tokens(params["embed"], tokens)
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+        def group_body(x, gp):
+            cross_p, layer_p = gp
+            ck = (img @ cross_p["attn"]["wk"]).reshape(
+                bsz, -1, geom.n_kv, geom.head_dim)
+            cv = (img @ cross_p["attn"]["wv"]).reshape(
+                bsz, -1, geom.n_kv, geom.head_dim)
+            x = _cross_block(cfg, cross_p, x, img)
+
+            def body(x, p):
+                h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+                a, k, v = _prefill_attn(cfg, p["attn"], h)
+                x = x + a
+                return _res(x + swiglu(
+                    p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))), (k, v)
+
+            x, (ks, vs) = jax.lax.scan(body, x, layer_p)
+            return x, (ks, vs, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(
+            group_body, x, (params["cross"], stacked))
+        lks = ks.reshape((cfg.n_layers,) + ks.shape[2:])
+        lvs = vs.reshape((cfg.n_layers,) + vs.shape[2:])
+        cache = {"self": {"k": lks, "v": lvs}, "cross": {"k": cks, "v": cvs}}
+    elif fam == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every - 1
+        x = embed_tokens(params["embed"], tokens)
+        shared = params["shared"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+        def group_body(x, gp):
+            from repro.models.ssm import mamba_block_cp
+            layer_p, site_norm = gp
+
+            def inner(x, p):
+                y, st = mamba_block_cp(cfg, p["mamba"],
+                                       rmsnorm(p["ln"], x, cfg.norm_eps),
+                                       return_state=True)
+                return _res(x + y), st
+
+            x, (convs, ssms) = jax.lax.scan(inner, x, layer_p)
+            h = rmsnorm(site_norm,
+                        rmsnorm(shared["ln_attn"], x, cfg.norm_eps),
+                        cfg.norm_eps)
+            a, k, v = _prefill_attn(cfg, shared["attn"], h)
+            x = x + a
+            x = _res(x + swiglu(shared["mlp"],
+                                rmsnorm(shared["ln_mlp"], x, cfg.norm_eps)))
+            return x, (convs, ssms, k, v)
+
+        x, (convs, ssms, ks, vs) = jax.lax.scan(
+            group_body, x, (stacked, params["site_norm"]))
+        cache = {
+            "ssm": {
+                "conv": convs.reshape((groups * per,) + convs.shape[2:]),
+                "ssm": ssms.reshape((groups * per,) + ssms.shape[2:]),
+            },
+            "self": {"k": ks, "v": vs},
+        }
+    elif fam == "encdec":
+        enc = _encoder(cfg, params, batch["audio_embed"], "none")
+        x = embed_tokens(params["embed"], tokens)
+        x = x + sinusoidal_positions(s, cfg.d_model)
+
+        def body(x, p):
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            a, k, v = _prefill_attn(cfg, p["self"], h)
+            x = x + a
+            ck = (enc @ p["cross"]["wk"]).reshape(bsz, -1, geom.n_kv, geom.head_dim)
+            cv = (enc @ p["cross"]["wv"]).reshape(bsz, -1, geom.n_kv, geom.head_dim)
+            x = x + full_attention(cfg, p["cross"],
+                                   rmsnorm(p["ln2"], x, cfg.norm_eps),
+                                   kv_x=enc, causal=False)
+            x = _res(x + gelu_mlp(p["mlp"], rmsnorm(p["ln3"], x, cfg.norm_eps)))
+            return x, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"self": {"k": ks, "v": vs}, "cross": {"k": cks, "v": cvs}}
+    else:
+        raise ValueError(fam)
+
+    if cache_len is not None and cache_len > s and "self" in cache:
+        pad = cache_len - s
+        cache["self"] = jax.tree.map(
+            lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            cache["self"])
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+# ================================================================== decode
+
+
+def _idx(cache_arr: jax.Array, i: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_index_in_dim(cache_arr, i, 0, keepdims=False)
+
+
+def _upd(cache_arr: jax.Array, new_layer: jax.Array, i: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_index_in_dim(cache_arr, new_layer, i, 0)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array, pos: jax.Array):
+    """One-token decode.  token [B,1] int32, pos [B] int32.
+    Returns (logits [B,Vpad] fp32, new cache).
+
+    Caches ride the scan CARRY and are updated in place with
+    dynamic-update-slice: with the cache argument donated, XLA aliases the
+    buffer and the step's temp memory stays O(one layer) — emitting updated
+    layers as stacked scan outputs instead double-buffers the whole cache
+    (measured +2× cache bytes on the 32k cells)."""
+    fam = cfg.family
+    x = embed_tokens(params["embed"], token)
+
+    if fam in ("dense", "moe"):
+        def body(carry, xs):
+            x, kc, vc = carry
+            p, i = xs
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            a, k_l, v_l = decode_attention(cfg, p["attn"], h,
+                                           _idx(kc, i), _idx(vc, i), pos)
+            x = x + a
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if fam == "moe":
+                y, _ = moe_ffn(cfg, p["moe"], h2)
+            else:
+                y = swiglu(p["mlp"], h2)
+            return (x + y, _upd(kc, k_l, i), _upd(vc, v_l, i)), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            body, (x, cache["self"]["k"], cache["self"]["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"self": {"k": ks, "v": vs}}
+    elif fam == "ssm":
+        def body(carry, xs):
+            x, convs, ssms = carry
+            p, i = xs
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, conv, ssm = mamba_decode(cfg, p["mamba"], h,
+                                        _idx(convs, i), _idx(ssms, i))
+            return (x + y, _upd(convs, conv, i), _upd(ssms, ssm, i)), None
+
+        (x, convs, ssms), _ = jax.lax.scan(
+            body, (x, cache["ssm"]["conv"], cache["ssm"]["ssm"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"ssm": {"conv": convs, "ssm": ssms}}
+    elif fam == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every - 1
+        shared = params["shared"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+        def group_body(carry, xs):
+            x, convs, ssms, kc, vc = carry
+            layer_p, site_norm, g = xs
+
+            def inner(icarry, ys):
+                x, convs, ssms = icarry
+                p, j = ys
+                li = g * per + j
+                h = rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, conv, ssm = mamba_decode(cfg, p["mamba"], h,
+                                            _idx(convs, li), _idx(ssms, li))
+                return (x + y, _upd(convs, conv, li), _upd(ssms, ssm, li)), None
+
+            (x, convs, ssms), _ = jax.lax.scan(
+                inner, (x, convs, ssms), (layer_p, jnp.arange(per)))
+            h = rmsnorm(site_norm, rmsnorm(shared["ln_attn"], x, cfg.norm_eps),
+                        cfg.norm_eps)
+            a, k_g, v_g = decode_attention(cfg, shared["attn"], h,
+                                           _idx(kc, g), _idx(vc, g), pos)
+            x = x + a
+            x = x + swiglu(shared["mlp"],
+                           rmsnorm(shared["ln_mlp"], x, cfg.norm_eps))
+            return (x, convs, ssms, _upd(kc, k_g, g), _upd(vc, v_g, g)), None
+
+        (x, convs, ssms, ks, vs), _ = jax.lax.scan(
+            group_body,
+            (x, cache["ssm"]["conv"], cache["ssm"]["ssm"],
+             cache["self"]["k"], cache["self"]["v"]),
+            (stacked, params["site_norm"], jnp.arange(groups)))
+        new_cache = {"ssm": {"conv": convs, "ssm": ssms},
+                     "self": {"k": ks, "v": vs}}
+    elif fam == "vlm":
+        groups = cfg.n_layers // cfg.cross_every
+        per = cfg.cross_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+        def group_body(carry, xs):
+            x, kc, vc = carry
+            cross_p, layer_p, ck, cv, g = xs
+            h = rmsnorm(cross_p["ln"], x, cfg.norm_eps)
+            a, _, _ = decode_attention(cfg, cross_p["attn"], h, ck, cv, pos,
+                                       update_cache=False)
+            x = x + jnp.tanh(cross_p["gate_attn"]).astype(x.dtype) * a
+            m = swiglu(cross_p["mlp"], rmsnorm(cross_p["ln_mlp"], x, cfg.norm_eps))
+            x = x + jnp.tanh(cross_p["gate_mlp"]).astype(x.dtype) * m
+
+            def inner(icarry, ys):
+                x, kc, vc = icarry
+                p, j = ys
+                li = g * per + j
+                h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+                a, k_l, v_l = decode_attention(cfg, p["attn"], h,
+                                               _idx(kc, li), _idx(vc, li), pos)
+                x = x + a
+                x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+                return (x, _upd(kc, k_l, li), _upd(vc, v_l, li)), None
+
+            (x, kc, vc), _ = jax.lax.scan(
+                inner, (x, kc, vc), (layer_p, jnp.arange(per)))
+            return (x, kc, vc), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            group_body, (x, cache["self"]["k"], cache["self"]["v"]),
+            (params["cross"], stacked, cache["cross"]["k"],
+             cache["cross"]["v"], jnp.arange(groups)))
+        new_cache = {"self": {"k": ks, "v": vs}, "cross": cache["cross"]}
+    elif fam == "encdec":
+        x = x + sinusoidal_positions(1, cfg.d_model, offset=pos[:, None])[:, None, :]
+
+        def body(carry, xs):
+            x, kc, vc = carry
+            p, ck, cv, i = xs
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            a, k_l, v_l = decode_attention(cfg, p["self"], h,
+                                           _idx(kc, i), _idx(vc, i), pos)
+            x = x + a
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            a2, _, _ = decode_attention(cfg, p["cross"], h2, ck, cv, pos,
+                                        update_cache=False)
+            x = x + a2
+            x = x + gelu_mlp(p["mlp"], rmsnorm(p["ln3"], x, cfg.norm_eps))
+            return (x, _upd(kc, k_l, i), _upd(vc, v_l, i)), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            body, (x, cache["self"]["k"], cache["self"]["v"]),
+            (params["layers"], cache["cross"]["k"], cache["cross"]["v"],
+             jnp.arange(cfg.n_layers)))
+        new_cache = {"self": {"k": ks, "v": vs}, "cross": cache["cross"]}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from(params["embed"], cfg, x)[:, 0]
+    return logits, new_cache

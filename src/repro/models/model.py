@@ -1,0 +1,124 @@
+"""Public model API: one object per architecture config.
+
+All methods are pure functions of (params, batch) so they can be jitted,
+lowered abstractly for the dry-run, or wrapped in shard_map-free smoke
+tests identically.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as D
+from repro.models import params as P
+from repro.models import stack
+from repro.models.layers import cross_entropy
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, use_pallas: bool = False):
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+
+    # ---- parameters ----
+    def param_specs(self):
+        return stack.param_specs(self.cfg)
+
+    def abstract_params(self):
+        return P.abstract(self.param_specs())
+
+    def init_params(self, key: jax.Array):
+        return P.initialize(self.param_specs(), key)
+
+    # ---- training ----
+    def loss(self, params: dict, batch: dict, *, remat: str = "none",
+             z_loss: float = 0.0):
+        logits, metrics = stack.forward(self.cfg, params, batch, remat=remat,
+                                        use_pallas=self.use_pallas)
+        loss, aux = cross_entropy(logits, batch["labels"],
+                                  self.cfg.vocab_size, z_loss)
+        metrics.update(aux)
+        if "moe_aux" in metrics:
+            loss = loss + self.cfg.router_aux_weight * metrics["moe_aux"]
+        return loss, metrics
+
+    # ---- serving ----
+    def prefill(self, params: dict, batch: dict, cache_len: int | None = None):
+        return D.prefill(self.cfg, params, batch, cache_len)
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    pos: jax.Array):
+        return D.decode_step(self.cfg, params, cache, token, pos)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return D.cache_specs(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return P.abstract(self.cache_specs(batch, seq_len))
+
+    def zero_cache(self, batch: int, seq_len: int):
+        return P.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          self.cache_specs(batch, seq_len))
+
+    # ---- batch/input declaration (dry-run ShapeDtypeStructs) ----
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """Abstract inputs for one assignment cell.  Modality frontends are
+        stubs per the assignment: precomputed frame/patch embeddings."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32, bf16 = jnp.int32, jnp.bfloat16
+
+        def tok(n):
+            return jax.ShapeDtypeStruct((b, n), i32)
+
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {
+                    "audio_embed": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+                    "tokens": tok(cfg.decoder_train_len),
+                    "labels": tok(cfg.decoder_train_len),
+                }
+            batch: dict[str, Any] = {"tokens": tok(s), "labels": tok(s)}
+            if cfg.family == "vlm":
+                batch["image_embed"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), bf16)
+            return batch
+        if shape.kind == "prefill":
+            if cfg.family == "encdec":
+                return {
+                    "audio_embed": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+                    "tokens": tok(cfg.decoder_train_len),
+                }
+            batch = {"tokens": tok(s)}
+            if cfg.family == "vlm":
+                batch["image_embed"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), bf16)
+            return batch
+        # decode: one token against a seq_len-deep cache
+        return {
+            "token": tok(1),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+    def sample_batch(self, shape: ShapeConfig, key: jax.Array) -> dict[str, Any]:
+        """Materialized random batch matching input_specs (smoke/real runs)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for name, sds in specs.items():
+            key, sub = jax.random.split(key)
+            if sds.dtype == jnp.int32 and name in ("tokens", "labels", "token"):
+                out[name] = jax.random.randint(sub, sds.shape, 0,
+                                               self.cfg.vocab_size, jnp.int32)
+            elif name == "pos":
+                out[name] = jnp.zeros(sds.shape, jnp.int32)
+            else:
+                out[name] = jax.random.normal(sub, sds.shape, jnp.float32
+                                              ).astype(sds.dtype)
+        return out
+
+
+def build(cfg: ModelConfig, use_pallas: bool = False) -> Model:
+    return Model(cfg, use_pallas)

@@ -1,0 +1,151 @@
+"""Hodgkin–Huxley cable cells — the paper's application workload.
+
+Arbor's ring benchmark uses morphologically detailed cable cells: an HH
+soma plus passive dendrite compartments.  We reproduce that structure:
+compartment 0 carries the full HH mechanism and the synapse; compartments
+1..C-1 are passive cable, coupled by axial conductance (explicit stencil).
+Gates use exponential-Euler at dt=0.025 ms (Arbor defaults); Arbor's
+implicit cable solve is replaced by an explicit stencil — the data flow
+(and therefore the systems behaviour being benchmarked) is identical, the
+numerics are standard for benchmark workloads.  Units: mV, ms, mS/cm².
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# classic HH constants
+C_M = 1.0
+G_NA, E_NA = 120.0, 50.0
+G_K, E_K = 36.0, -77.0
+G_L, E_L = 0.3, -54.4
+E_SYN = 0.0
+V_REST = -65.0
+V_THRESH = -20.0  # upward crossing = spike
+
+
+@dataclass(frozen=True)
+class CellConfig:
+    n_compartments: int = 32
+    g_axial: float = 0.5       # coupling conductance between compartments
+    g_pas: float = 0.1         # passive leak in dendrite
+    e_pas: float = -65.0
+    tau_syn: float = 2.0       # ms, exponential synapse
+    syn_weight: float = 2.0    # conductance increment per spike
+    dt: float = 0.025          # ms (Arbor/NEURON benchmark step)
+
+
+class CellState(NamedTuple):
+    v: jax.Array       # [n, C]
+    m: jax.Array       # [n]
+    h: jax.Array       # [n]
+    n: jax.Array       # [n]
+    g_syn: jax.Array   # [n]
+
+
+def init_state(n_cells: int, cfg: CellConfig) -> CellState:
+    v = jnp.full((n_cells, cfg.n_compartments), V_REST, jnp.float32)
+    # steady-state gates at rest
+    a_m, b_m = _alpha_m(V_REST), _beta_m(V_REST)
+    a_h, b_h = _alpha_h(V_REST), _beta_h(V_REST)
+    a_n, b_n = _alpha_n(V_REST), _beta_n(V_REST)
+    return CellState(
+        v=v,
+        m=jnp.full((n_cells,), a_m / (a_m + b_m), jnp.float32),
+        h=jnp.full((n_cells,), a_h / (a_h + b_h), jnp.float32),
+        n=jnp.full((n_cells,), a_n / (a_n + b_n), jnp.float32),
+        g_syn=jnp.zeros((n_cells,), jnp.float32),
+    )
+
+
+# --- rate functions (vtrap-safe forms) ---
+def _vtrap(x, y):
+    return jnp.where(jnp.abs(x / y) < 1e-6, y * (1 - x / y / 2), x / (jnp.exp(x / y) - 1.0))
+
+
+def _alpha_m(v):
+    return 0.1 * _vtrap(-(v + 40.0), 10.0)
+
+
+def _beta_m(v):
+    return 4.0 * jnp.exp(-(v + 65.0) / 18.0)
+
+
+def _alpha_h(v):
+    return 0.07 * jnp.exp(-(v + 65.0) / 20.0)
+
+
+def _beta_h(v):
+    return 1.0 / (jnp.exp(-(v + 35.0) / 10.0) + 1.0)
+
+
+def _alpha_n(v):
+    return 0.01 * _vtrap(-(v + 55.0), 10.0)
+
+
+def _beta_n(v):
+    return 0.125 * jnp.exp(-(v + 65.0) / 80.0)
+
+
+def hh_soma_update(v0, m, h, n, g_syn, i_axial, dt, i_ext):
+    """Exponential-Euler update of the HH soma.  All inputs [n] f32.
+    This is the compute hotspot (kernels/hh_neuron.py implements it as a
+    Pallas kernel; this jnp body doubles as its oracle)."""
+    a_m, b_m = _alpha_m(v0), _beta_m(v0)
+    a_h, b_h = _alpha_h(v0), _beta_h(v0)
+    a_n, b_n = _alpha_n(v0), _beta_n(v0)
+
+    def gate(x, a, b):
+        tau = 1.0 / (a + b)
+        inf = a * tau
+        return inf + (x - inf) * jnp.exp(-dt / tau)
+
+    m_n = gate(m, a_m, b_m)
+    h_n = gate(h, a_h, b_h)
+    n_n = gate(n, a_n, b_n)
+
+    g_na = G_NA * (m_n ** 3) * h_n
+    g_k = G_K * (n_n ** 4)
+    g_tot = g_na + g_k + G_L + g_syn
+    i_inf = g_na * E_NA + g_k * E_K + G_L * E_L + g_syn * E_SYN + i_axial + i_ext
+    v_inf = i_inf / g_tot
+    v_n = v_inf + (v0 - v_inf) * jnp.exp(-dt * g_tot / C_M)
+    return v_n, m_n, h_n, n_n
+
+
+def step(state: CellState, cfg: CellConfig, spike_in: jax.Array,
+         i_ext: jax.Array, *, use_pallas: bool = False):
+    """One dt step.  spike_in: [n] float (1.0 = presynaptic spike arrives
+    this step); i_ext: [n] external current into the soma.
+    Returns (new_state, spiked [n] bool)."""
+    v, m, h, n, g = state
+    dt = cfg.dt
+
+    # synapse: exponential decay + event increments
+    g = g * jnp.exp(-dt / cfg.tau_syn) + cfg.syn_weight * spike_in
+
+    # cable stencil (explicit): i_axial into each compartment
+    left = jnp.pad(v[:, :-1], ((0, 0), (1, 0)), mode="edge")
+    right = jnp.pad(v[:, 1:], ((0, 0), (0, 1)), mode="edge")
+    i_axial = cfg.g_axial * (left - 2.0 * v + right)
+
+    # passive dendrite compartments (1..C-1)
+    v_dend = v[:, 1:]
+    dv = (i_axial[:, 1:] + cfg.g_pas * (cfg.e_pas - v_dend)) * (dt / C_M)
+    v_dend_new = v_dend + dv
+
+    # HH soma (compartment 0)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        v0n, mn, hn, nn = kops.hh_step(v[:, 0], m, h, n, g,
+                                       i_axial[:, 0], dt, i_ext)
+    else:
+        v0n, mn, hn, nn = hh_soma_update(v[:, 0], m, h, n, g,
+                                         i_axial[:, 0], dt, i_ext)
+
+    spiked = (v0n >= V_THRESH) & (v[:, 0] < V_THRESH)
+    v_new = jnp.concatenate([v0n[:, None], v_dend_new], axis=1)
+    return CellState(v_new, mn, hn, nn, g), spiked

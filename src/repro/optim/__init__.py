@@ -1,0 +1,4 @@
+from repro.optim import adamw
+from repro.optim.adamw import OptState
+
+__all__ = ["adamw", "OptState"]

@@ -1,0 +1,82 @@
+"""AdamW with fp32 master weights, sharded identically to the parameters
+(ZeRO-3 falls out of the param partition specs), global-norm clipping and a
+warmup+cosine schedule.  No optax dependency (not installed here)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # i32 scalar
+    master: Any              # fp32 copies of params
+    m: Any
+    v: Any
+
+
+def init(params: Any) -> OptState:
+    # copy=True: an already-fp32 param must not alias its master copy
+    # (double-donation otherwise).
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def abstract_state(abstract_params: Any) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=jax.tree.map(f32, abstract_params),
+        m=jax.tree.map(f32, abstract_params),
+        v=jax.tree.map(f32, abstract_params),
+    )
+
+
+def schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def apply(cfg: TrainConfig, state: OptState, grads: Any,
+          param_dtypes: Any) -> tuple[Any, OptState, dict[str, jax.Array]]:
+    """One AdamW update.  Returns (new bf16 params, new state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(master, m, v):
+        mh = m / c1
+        vh = v / c2
+        return master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+
+    new_master = jax.tree.map(upd, state.master, new_m, new_v)
+    new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype),
+                              new_master, param_dtypes)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_master, new_m, new_v), metrics

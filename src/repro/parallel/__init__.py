@@ -1,0 +1,7 @@
+from repro.parallel.ctx import bind, constrain, resolve, sharding_for, ShardCtx
+from repro.parallel.rules import RULESETS, rules_for
+
+__all__ = [
+    "bind", "constrain", "resolve", "sharding_for", "ShardCtx",
+    "RULESETS", "rules_for",
+]

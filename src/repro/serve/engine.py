@@ -1,0 +1,117 @@
+"""Serving engine: slot-based KV cache + continuous batching.
+
+The decode step is a fixed-shape jitted function over B slots; requests
+stream in, occupy a free slot (their prompt prefilled into the slot's cache
+rows), decode greedily until EOS/max_tokens, and release the slot.  This is
+the vLLM-style continuous-batching control loop expressed over the
+framework's fixed-shape ``decode_step`` — slot state lives in the engine,
+tensor state in the donated cache.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    eos_id: int = -1            # -1: never stops early
+    out: list[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    served: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    batch_occupancy: list[int] = field(default_factory=list)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.batch_occupancy)) if self.batch_occupancy else 0.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Any, *, slots: int = 4,
+                 max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        cache = model.zero_cache(slots, max_len)
+        self.cache = cache
+        self.pos = np.zeros((slots,), np.int32)       # next write position
+        self.active: dict[int, Request] = {}          # slot -> request
+        self.stats = EngineStats()
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._last_token = np.zeros((slots, 1), np.int32)
+
+    # ------------------------------------------------------------ admit
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _admit(self, req: Request, slot: int) -> None:
+        """Prefill the prompt into this slot serially (single-slot prefill;
+        a production engine would batch same-length prompts)."""
+        req.t_submit = req.t_submit or time.perf_counter()
+        tokens = req.prompt[-(self.max_len - req.max_new):]
+        # step the prompt through decode one token at a time into the slot
+        # rows (slot-local prefill keeps the cache layout identical)
+        for i, tok in enumerate(tokens):
+            self._last_token[slot, 0] = tok
+            self.pos[slot] = i
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                jnp.asarray(self._last_token), jnp.asarray(self.pos))
+        self.pos[slot] = len(tokens)
+        nxt = int(jnp.argmax(logits[slot]))
+        req.out.append(nxt)
+        req.t_first = time.perf_counter()
+        self._last_token[slot, 0] = nxt
+        self.active[slot] = req
+
+    # ------------------------------------------------------------- run
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or self.active:
+            while pending and self._free_slots():
+                self._admit(pending.pop(0), self._free_slots()[0])
+
+            if not self.active:
+                continue
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                jnp.asarray(self._last_token), jnp.asarray(self.pos))
+            self.stats.decode_steps += 1
+            self.stats.batch_occupancy.append(len(self.active))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+            finished = []
+            for slot, req in self.active.items():
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                self.stats.tokens_out += 1
+                self.pos[slot] += 1
+                self._last_token[slot, 0] = tok
+                if (tok == req.eos_id or len(req.out) >= req.max_new
+                        or self.pos[slot] >= self.max_len - 1):
+                    req.t_done = time.perf_counter()
+                    finished.append(slot)
+            for slot in finished:
+                done.append(self.active.pop(slot))
+                self.stats.served += 1
+        return done

@@ -1,0 +1,82 @@
+"""Train-step factory: loss → grads → AdamW, with optional gradient
+accumulation (microbatching) and int8 error-feedback gradient compression.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+function; binding to a mesh happens in the launcher (launch/train.py,
+launch/dryrun.py) via the shard context + NamedShardings — the step itself
+is portable across bindings (the paper's image/host split).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def abstract_train_state(model: Model) -> TrainState:
+    ap = model.abstract_params()
+    return TrainState(params=ap, opt=adamw.abstract_state(ap))
+
+
+def init_train_state(model: Model, key: jax.Array) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=adamw.init(params))
+
+
+def make_train_step(model: Model, run: RunConfig) -> Callable:
+    tc = run.train
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=tc.remat, z_loss=tc.z_loss)
+
+    def compute_grads(params, batch):
+        if tc.microbatches and tc.microbatches > 1:
+            n = tc.microbatches
+            b = batch["tokens"].shape[0] if "tokens" in batch else (
+                batch["token"].shape[0])
+            assert b % n == 0, (b, n)
+            micro = jax.tree.map(
+                lambda x: x.reshape((n, b // n) + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc, l_acc = carry
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads)
+                return (g_acc, l_acc + loss / n), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+            return (loss, metrics), grads
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return (loss, metrics), grads
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, metrics), grads = compute_grads(state.params, batch)
+        if tc.grad_compress == "int8_ef":
+            from repro.optim.compress import compress_decompress
+            grads = compress_decompress(grads)
+        params, opt, opt_metrics = adamw.apply(tc, state.opt, grads,
+                                               state.params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; only launch/dryrun.py creates the 512 placeholder devices."""
+import jax
+import pytest
+
+from repro.configs import ALL_ARCHS, reduced
+from repro.configs.base import ShapeConfig
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def smoke_shape():
+    return ShapeConfig("smoke", "train", 32, 2)
+
+
+def smoke_cfg(name: str):
+    return reduced(ALL_ARCHS[name])

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step + prefill/decode on CPU; output shapes + finiteness.
+(Full configs are exercised only via the dry-run, per the assignment.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, applicable_shapes, reduced
+from repro.configs.base import RunConfig, ShapeConfig, TrainConfig
+from repro.models import build
+from repro.models.stack import param_count
+from repro.train.step import init_train_state, make_train_step
+
+ARCHS = sorted(ALL_ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced(ALL_ARCHS[name])
+            model = build(cfg)
+            params = model.init_params(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(built, name):
+    cfg, model, params = built(name)
+    shape = ShapeConfig("s", "train", 32, 2)
+    batch = model.sample_batch(shape, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_runs_and_updates(built, name):
+    cfg, model, params = built(name)
+    shape = ShapeConfig("s", "train", 32, 2)
+    run = RunConfig(model=cfg, shape=shape,
+                    train=TrainConfig(remat="full", learning_rate=1e-3))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, run))
+    batch = model.sample_batch(shape, jax.random.PRNGKey(1))
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert int(new_state.opt.step) == 1
+    # at least one parameter must actually change
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(new_state.params)))
+    assert changed, name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_consistency(built, name):
+    """Greedy decode after prefill must equal teacher-forced forward:
+    the cached path and the full path are the paper's two 'environments'."""
+    cfg, model, params = built(name)
+    s = 16
+    batch = model.sample_batch(ShapeConfig("p", "prefill", s, 2),
+                               jax.random.PRNGKey(2))
+    logits_pre, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=s + 4))(params, batch)
+
+    # teacher-forced logits at the last position must match prefill's
+    fwd_batch = dict(batch)
+    fwd_batch["labels"] = batch["tokens"]
+    from repro.models import stack
+    full_logits, _ = jax.jit(
+        lambda p, b: stack.forward(cfg, p, b))(params, fwd_batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=3e-2, atol=3e-2)
+
+    # one decode step advances without NaNs and returns the right shapes
+    tok = jnp.argmax(logits_pre, axis=-1)[:, None].astype(jnp.int32)
+    pos = jnp.full((2,), s, jnp.int32)
+    logits_dec, cache2 = jax.jit(model.decode_step)(params, cache, tok, pos)
+    assert logits_dec.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits_dec)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_full_config_param_specs(name):
+    """Full (unreduced) configs must declare specs with positive sizes and
+    the published parameter counts (±15%)."""
+    published = {
+        "llama-3.2-vision-11b": 10.6e9, "mamba2-2.7b": 2.7e9,
+        "phi3-mini-3.8b": 3.8e9, "phi3-medium-14b": 14e9,
+        "deepseek-7b": 7e9, "deepseek-coder-33b": 33e9,
+        "qwen3-moe-30b-a3b": 30.5e9, "granite-moe-1b-a400m": 1.3e9,
+        "whisper-medium": 0.77e9, "zamba2-2.7b": 2.7e9,
+    }
+    n = param_count(ALL_ARCHS[name])
+    expect = published[name]
+    assert 0.65 * expect < n < 1.35 * expect, (name, n, expect)
+
+
+def test_applicable_shapes_policy():
+    for name in ARCHS:
+        shapes = applicable_shapes(name)
+        assert "train_4k" in shapes and "decode_32k" in shapes
+        if name in ("mamba2-2.7b", "zamba2-2.7b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+Each kernel sweeps shapes and dtypes and must assert_allclose against its
+ref.py oracle — the repo-level native-vs-container comparison (the oracle
+is the 'portable environment', the kernel the 'host-optimized' one)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hh_neuron import hh_step_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------------ HH
+
+
+@pytest.mark.parametrize("n", [7, 128, 1000, 4096])
+@pytest.mark.parametrize("dt", [0.0125, 0.025])
+def test_hh_matches_oracle(n, dt):
+    v0 = jnp.asarray(RNG.uniform(-90, 30, n), jnp.float32)
+    m = jnp.asarray(RNG.uniform(0, 1, n), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0, 1, n), jnp.float32)
+    nn = jnp.asarray(RNG.uniform(0, 1, n), jnp.float32)
+    g = jnp.asarray(RNG.uniform(0, 8, n), jnp.float32)
+    iax = jnp.asarray(RNG.uniform(-20, 20, n), jnp.float32)
+    iext = jnp.asarray(RNG.uniform(0, 10, n), jnp.float32)
+    out_k = hh_step_pallas(v0, m, h, nn, g, iax, iext, dt=dt, interpret=True)
+    out_r = ref.hh_step_ref(v0, m, h, nn, g, iax, iext, dt=dt)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_hh_block_shape_independence():
+    n = 2048
+    args = [jnp.asarray(RNG.uniform(0, 1, n), jnp.float32) for _ in range(7)]
+    a = hh_step_pallas(*args, dt=0.025, block_rows=8, interpret=True)
+    b = hh_step_pallas(*args, dt=0.025, block_rows=4, interpret=True)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+# --------------------------------------------------------------- flash
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 128),
+                                     (256, 64, 128), (512, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(s, bq, bk, dtype, causal):
+    bh, d = 3, 64
+    q = jnp.asarray(RNG.standard_normal((bh, s, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((bh, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((bh, s, d)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_skipping_is_exact():
+    """Causal block skipping must not change results vs full iteration."""
+    bh, s, d = 2, 256, 32
+    q = jnp.asarray(RNG.standard_normal((bh, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, s, d)), jnp.float32)
+    a = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_k=64,
+                               interpret=True)
+    b = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ----------------------------------------------------------------- SSD
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (256, 64)])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_matches_chunked_oracle(s, chunk, g):
+    b, h, p, n = 2, 4, 32, 16
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.1, 1.0, h), jnp.float32)
+    b_in = jnp.asarray(RNG.standard_normal((b, s, g, n)), jnp.float32)
+    c_in = jnp.asarray(RNG.standard_normal((b, s, g, n)), jnp.float32)
+    yk, fk = ssd_scan_pallas(x, dt, a, b_in, c_in, chunk, interpret=True)
+    yr, fr = ref.ssd_scan_ref(x, dt, a, b_in, c_in, chunk)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fr),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_equals_sequential():
+    """The chunked SSD oracle itself must equal the O(S) recurrence —
+    validating the oracle against an independent formulation."""
+    b, s, h, p, n = 1, 96, 2, 16, 8
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.2, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.05, 0.8, h), jnp.float32)
+    b_in = jnp.asarray(RNG.standard_normal((b, s, 1, n)), jnp.float32)
+    c_in = jnp.asarray(RNG.standard_normal((b, s, 1, n)), jnp.float32)
+    y1, f1 = ref.ssd_scan_ref(x, dt, a, b_in, c_in, 32)
+    y2, f2 = ref.ssd_sequential_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_step_matches_scan_tail():
+    """Prefill-then-decode must continue the sequence exactly: run S+1
+    tokens through the sequential reference vs S through the chunked scan
+    + 1 decode step (the serving continuation invariant)."""
+    from repro.models.ssm import ssd_chunked, ssd_decode_step
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    x = jnp.asarray(RNG.standard_normal((b, s + 1, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s + 1, h)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.05, 0.8, h), jnp.float32)
+    b_in = jnp.asarray(RNG.standard_normal((b, s + 1, 1, n)), jnp.float32)
+    c_in = jnp.asarray(RNG.standard_normal((b, s + 1, 1, n)), jnp.float32)
+
+    y_full, _ = ref.ssd_sequential_ref(x, dt, a, b_in, c_in)
+    _, state = ssd_chunked(x[:, :s], dt[:, :s], a, b_in[:, :s],
+                           c_in[:, :s], 16)
+    y_step, _ = ssd_decode_step(state, x[:, s], dt[:, s], a,
+                                b_in[:, s], c_in[:, s])
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full[:, s]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,75 @@
+"""MoE dispatch invariants (capacity, routing, combine) on the local path;
+the sharded a2a path is covered by tests/test_integration.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ALL_ARCHS, reduced
+from repro.models.moe import _capacity, _moe_local, moe_specs
+from repro.models import params as P
+
+
+def _cfg(**kw):
+    import dataclasses
+    base = reduced(ALL_ARCHS["granite-moe-1b-a400m"])
+    return dataclasses.replace(base, **kw)
+
+
+def _run(cfg, x, key=0):
+    p = P.initialize(moe_specs(cfg, None), jax.random.PRNGKey(key))
+    return _moe_local(cfg, p, x, None, 1)
+
+
+def test_moe_output_shape_and_finite():
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    y, aux = _run(cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    assert aux.shape == (2, 16)
+    # balanced-ish random routing: aux ~ 1.0 for uniform router
+    assert 0.5 < float(aux[0, 0]) < 4.0
+
+
+def test_moe_capacity_drops_tokens_but_not_correctness():
+    """With capacity_factor tiny, outputs shrink toward zero (dropped
+    tokens pass through residual as zeros) but never NaN."""
+    cfg_small = _cfg(capacity_factor=0.05)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg_small.d_model),
+                          jnp.bfloat16)
+    y_small, _ = _run(cfg_small, x)
+    cfg_big = _cfg(capacity_factor=8.0)
+    y_big, _ = _run(cfg_big, x)
+    assert bool(jnp.all(jnp.isfinite(y_small.astype(jnp.float32))))
+    n_small = float(jnp.linalg.norm(y_small.astype(jnp.float32)))
+    n_big = float(jnp.linalg.norm(y_big.astype(jnp.float32)))
+    assert n_small < n_big
+
+
+def test_moe_no_drop_when_capacity_exact():
+    """Tiny token counts use exact capacity (decode path): zero drops, so
+    doubling capacity further must not change the output."""
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 1, cfg.d_model),
+                          jnp.bfloat16)
+    y1, _ = _run(cfg, x)
+    import dataclasses
+    y2, _ = _run(dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2), x)
+    # n*k small => cap = ceil(n*k*cf/E) >= 1 slot per expert either way;
+    # verify the combine is stable across capacity settings
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=1e-2,
+                               atol=1e-2)
+
+
+@given(st.integers(4, 64), st.integers(2, 16), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_capacity_formula(n, e, k):
+    import dataclasses
+    cfg = dataclasses.replace(_cfg(), n_experts=e, top_k=min(k, e))
+    cap = _capacity(n, cfg)
+    assert cap >= 1
+    assert cap <= max(int(n * cfg.top_k * cfg.capacity_factor / e), 1) + 1

@@ -1,0 +1,180 @@
+"""Regression tests for the §Perf optimizations: the optimized pathways
+must (a) stay numerically correct and (b) actually move fewer bytes than
+the variants they replaced — asserted via the inspector, which makes the
+perf work un-regressable by CI (the paper's 'performance-verified' gate)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sub(code: str):
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_cp_prefix_math():
+    """The cross-shard prefix must reproduce a sequential linear scan."""
+    from repro.models.ssm import _cp_prefix
+
+    rng = np.random.default_rng(0)
+    tp, b, h, p, n = 4, 2, 3, 4, 5
+    s_all = jnp.asarray(rng.standard_normal((tp, b, h, p, n)), jnp.float32)
+    d_all = jnp.asarray(rng.uniform(0.1, 0.9, (tp, b, h)), jnp.float32)
+
+    # sequential reference
+    acc = np.zeros((b, h, p, n), np.float32)
+    expect = []
+    for j in range(tp):
+        expect.append(acc.copy())
+        acc = acc * np.asarray(d_all)[j][..., None, None] + np.asarray(s_all)[j]
+
+    for i in range(tp):
+        got, final = _cp_prefix(s_all, d_all, jnp.asarray(i))
+        np.testing.assert_allclose(np.asarray(got), expect[i], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(final), acc, rtol=1e-6)
+
+
+def test_sp_rules_move_fewer_bytes_than_no_sp():
+    """train rules (explicit SP transitions) vs train_no_sp on the same
+    model must not increase wire traffic, and the ssm cp path must beat
+    the GSPMD-default by a wide margin (the §Perf iteration-1 result)."""
+    out = _sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, json
+        from repro.configs import ALL_ARCHS, reduced, ShapeConfig
+        from repro.configs.base import RunConfig, TrainConfig
+        from repro.core.inspector import parse_hlo
+        from repro.launch.bind import abstract_cell
+        from repro.models import build
+        from repro.parallel import bind, rules_for
+        import dataclasses
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # scale matters: the GSPMD fallback replicates the per-chunk state
+        # tensor (scales with B*S) while cp pays fixed weight/state-summary
+        # gathers — the crossover needs a non-toy sequence length.
+        cfg = dataclasses.replace(reduced(ALL_ARCHS["mamba2-2.7b"]),
+                                  n_layers=2, ssd_chunk=16)
+        model = build(cfg)
+        shape = ShapeConfig("t", "train", 512, 8)
+
+        def moved(rules):
+            run = RunConfig(model=cfg, shape=shape, rules=rules,
+                            train=TrainConfig(remat="full"))
+            with bind(mesh, rules_for(run)):
+                fn, args, shards, out_sh, donate = abstract_cell(model, run, mesh)
+                hlo = jax.jit(fn, in_shardings=shards, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args).compile().as_text()
+            return parse_hlo(hlo, 8).total_moved_bytes
+
+        opt = moved("train")
+        base = moved("train_no_sp")
+        print(json.dumps({"opt": opt, "base": base}))
+    """)
+    import json
+
+    res = json.loads(out.strip().splitlines()[-1])
+    # context-parallel SSD must move far fewer bytes than GSPMD's
+    # state-replication fallback
+    assert res["opt"] < 0.7 * res["base"], res
+
+
+def test_decode_seq_sharded_cache_parity():
+    """GQA arch with kv < tp (seq-sharded cache layout) must decode to the
+    same logits sharded and unsharded."""
+    out = _sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ALL_ARCHS, reduced, ShapeConfig
+        from repro.configs.base import RunConfig
+        from repro.launch.bind import (batch_shardings, cache_shardings,
+                                       param_shardings)
+        from repro.models import build
+        from repro.parallel import bind, rules_for
+        import dataclasses
+
+        # kv=1 < tp=4 forces the seq-sharded cache layout
+        cfg = dataclasses.replace(reduced(ALL_ARCHS["deepseek-coder-33b"]),
+                                  n_kv_heads=1, n_heads=4)
+        model = build(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init_params(key)
+        s = 16
+        pb = model.sample_batch(ShapeConfig("p", "prefill", s, 2), key)
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=s + 2))(params, pb)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        pos = jnp.full((2,), s, jnp.int32)
+        ref, _ = jax.jit(model.decode_step)(params, cache, tok, pos)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        drun = RunConfig(model=cfg,
+                         shape=ShapeConfig("d", "decode", s + 2, 2),
+                         rules="serve")
+        with bind(mesh, rules_for(drun)):
+            psh = param_shardings(model, mesh)
+            csh = cache_shardings(model, mesh, 2, s + 2)
+            got, _ = jax.jit(model.decode_step)(
+                jax.device_put(params, psh), jax.device_put(cache, csh),
+                tok, pos)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err < 5e-2, err
+        print("DECODE PARITY", err)
+    """)
+    assert "DECODE PARITY" in out
+
+
+def test_flash_attention_model_path_parity():
+    """use_pallas=True routes dense attention through the flash kernel
+    (interpret on CPU); loss must match the jnp path."""
+    import dataclasses
+
+    from repro.configs import ALL_ARCHS, reduced, ShapeConfig
+    from repro.models import build
+
+    cfg = dataclasses.replace(reduced(ALL_ARCHS["deepseek-7b"]), n_layers=2)
+    key = jax.random.PRNGKey(0)
+    m_ref = build(cfg, use_pallas=False)
+    m_ker = build(cfg, use_pallas=True)
+    params = m_ref.init_params(key)
+    batch = m_ref.sample_batch(ShapeConfig("t", "train", 128, 2), key)
+    l1, _ = jax.jit(lambda p, b: m_ref.loss(p, b))(params, batch)
+    l2, _ = jax.jit(lambda p, b: m_ker.loss(p, b))(params, batch)
+    assert abs(float(l1) - float(l2)) < 2e-2, (float(l1), float(l2))
+
+
+def test_int8_gradient_compression_trains():
+    """grad_compress='int8_ef' must still descend (the cross-pod DP
+    bandwidth knob from DESIGN §9)."""
+    from repro.configs import ALL_ARCHS, reduced, ShapeConfig
+    from repro.configs.base import RunConfig, TrainConfig
+    from repro.models import build
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = reduced(ALL_ARCHS["phi3-mini-3.8b"])
+    model = build(cfg)
+    shape = ShapeConfig("t", "train", 32, 4)
+    run = RunConfig(model=cfg, shape=shape,
+                    train=TrainConfig(learning_rate=3e-3, warmup_steps=1,
+                                      grad_compress="int8_ef"))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, run))
+    batch = model.sample_batch(shape, jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(6):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses

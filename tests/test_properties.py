@@ -1,0 +1,148 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MeshConfig, ModelConfig
+from repro.core import inspector
+from repro.models.layers import HeadGeom, ceil_mult, cross_entropy
+from repro.optim import adamw
+from repro.configs.base import TrainConfig
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ------------------------------------------------------------ HeadGeom
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.sampled_from([1, 2, 4, 8, 16]))
+@settings(**SETTINGS)
+def test_head_geom_invariants(kv, group, tp):
+    """For every GQA geometry: the padded run layout must (a) be divisible
+    by tp, (b) contain every real head, (c) keep q-head -> kv-head grouping."""
+    h = kv * group
+    geom = HeadGeom(n_heads=h, n_kv=kv, head_dim=64, tp=tp)
+    assert geom.h_run % tp == 0
+    assert geom.h_run >= h
+    assert geom.g_pad >= geom.group
+    assert geom.h_run == geom.n_kv * geom.g_pad
+    # real head i = (k, g) lives at flat position k*g_pad + g < h_run
+    for k in range(kv):
+        for g in range(group):
+            assert k * geom.g_pad + g < geom.h_run
+
+
+@given(st.integers(1, 1000), st.integers(1, 256))
+@settings(**SETTINGS)
+def test_ceil_mult(x, m):
+    r = ceil_mult(x, m)
+    assert r % m == 0 and r >= x and r - x < m
+
+
+# ------------------------------------------------------- cross entropy
+
+
+@given(st.integers(2, 8), st.integers(4, 32), st.integers(0, 200))
+@settings(**SETTINGS)
+def test_cross_entropy_padded_vocab_invariance(b, v, pad):
+    """Padding the vocab dim must not change the loss (padded logits are
+    masked): the invariant the Megatron-style padded embedding relies on."""
+    rng = np.random.default_rng(b * 1000 + v)
+    logits = jnp.asarray(rng.standard_normal((b, 4, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, 4)), jnp.int32)
+    loss1, _ = cross_entropy(logits, labels, v)
+    padded = jnp.pad(logits, ((0, 0), (0, 0), (0, pad)),
+                     constant_values=123.0)  # garbage in padding
+    loss2, _ = cross_entropy(padded, labels, v)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-5)
+
+
+# ------------------------------------------------------------- optimizer
+
+
+@given(st.floats(1e-5, 1e-2), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_quadratic(lr, steps):
+    """AdamW must reduce a convex quadratic from any small LR."""
+    tc = TrainConfig(learning_rate=lr, warmup_steps=0, total_steps=1000,
+                     weight_decay=0.0, grad_clip=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0], jnp.float32)}
+    state = adamw.init(params)
+    loss0 = float(jnp.sum(params["w"] ** 2))
+    for _ in range(steps):
+        grads = {"w": 2 * state.master["w"]}
+        params, state, _ = adamw.apply(tc, state, grads, params)
+    assert float(jnp.sum(state.master["w"] ** 2)) < loss0
+
+
+def test_adamw_grad_clip_bounds_update():
+    tc = TrainConfig(learning_rate=1.0, warmup_steps=0, grad_clip=1.0)
+    params = {"w": jnp.zeros((3,), jnp.float32)}
+    state = adamw.init(params)
+    grads = {"w": jnp.asarray([1e6, -1e6, 1e6], jnp.float32)}
+    clipped, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
+    assert float(jnp.linalg.norm(clipped["w"])) <= 1.0 + 1e-5
+    assert float(gnorm) > 1e5
+
+
+# ------------------------------------------------------------ inspector
+
+
+@given(st.integers(1, 64), st.sampled_from(["all-reduce", "all-gather",
+                                            "reduce-scatter",
+                                            "collective-permute"]),
+       st.integers(2, 512))
+@settings(**SETTINGS)
+def test_ring_model_bounds(payload_mib, kind, g):
+    """Per-device moved bytes are bounded by 2× payload for any group."""
+    op = inspector.CollectiveOp("x", kind, payload_mib * 2**20, g, "main")
+    assert 0 < op.moved_bytes <= 2 * payload_mib * 2**20
+
+
+@given(st.integers(1, 30), st.integers(1, 10))
+@settings(**SETTINGS)
+def test_hlo_cost_trip_multiplication(trips, dim):
+    """A dot inside a known-trip-count while must be counted trips times."""
+    n = dim * 8
+    hlo = f"""HloModule m
+
+%body (p: (s32[], f32[{n},{n}])) -> (s32[], f32[{n},{n}]) {{
+  %p = (s32[], f32[{n},{n}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[{n},{n}] get-tuple-element(%p), index=1
+  %d = f32[{n},{n}] dot(%g1, %g1), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  ROOT %t = (s32[], f32[{n},{n}]) tuple(%g0, %d)
+}}
+
+%cond (p: (s32[], f32[{n},{n}])) -> pred[] {{
+  %p = (s32[], f32[{n},{n}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant({trips})
+  ROOT %lt = pred[] compare(%g0, %c), direction=LT
+}}
+
+ENTRY %main (a: f32[{n},{n}]) -> f32[{n},{n}] {{
+  %a = f32[{n},{n}] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[{n},{n}]) tuple(%z, %a)
+  %w = (s32[], f32[{n},{n}]) while(%t0), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trips}"}}}}
+  ROOT %r = f32[{n},{n}] get-tuple-element(%w), index=1
+}}
+"""
+    cost = inspector.hlo_cost(hlo)
+    expect = 2.0 * n * n * n * trips
+    assert abs(cost["dot_flops"] - expect) / expect < 1e-6
+
+
+# -------------------------------------------------------------- mesh
+
+
+@given(st.sampled_from([(16, 16), (2, 16, 16), (4, 8), (2, 4, 4)]))
+@settings(max_examples=8, deadline=None)
+def test_mesh_config_axis_arithmetic(shape):
+    axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+    mc = MeshConfig(shape, axes)
+    assert mc.n_devices == int(np.prod(shape))
+    assert mc.axis_size("model") == shape[-1]
+    assert mc.axis_size("nonexistent") == 1
