@@ -17,6 +17,7 @@ SUITES = [
     ("ring_scaling", "benchmarks.ring_scaling"),  # Figs 6/7 + 8/9
     ("ring_accel", "benchmarks.ring_accel"),      # Figs 10/11
     ("ring_podscale", "benchmarks.ring_podscale"),  # Figs 6/7 at paper scale (dry-run)
+    ("serve_throughput", "benchmarks.serve_throughput"),  # paged serving
 ]
 
 

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests through the continuous-
-batching engine (slots, TTFT, occupancy).
+"""Serve a small model with batched requests through the paged
+continuous-batching engine (prefix cache, chunked prefill, TTFT,
+occupancy).  The shared prompt prefix makes the page reuse visible.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -8,7 +9,9 @@ import json
 from repro.launch.serve import serve
 
 if __name__ == "__main__":
-    res = serve("deepseek-7b", n_requests=8, slots=4, max_len=96, max_new=12)
+    res = serve("deepseek-7b", n_requests=8, slots=4, max_len=96, max_new=12,
+                shared_prefix=24)
     print(json.dumps(res, indent=1))
     assert res["served"] == 8
+    assert res["engine"] == "paged" and res["cached_tokens"] > 0
     print("OK")

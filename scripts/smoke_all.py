@@ -1,4 +1,8 @@
-"""Dev harness: tiny forward/train/prefill/decode for every family on CPU."""
+"""Dev harness: tiny forward/train/prefill/decode for every family on CPU,
+plus the serving-throughput smoke gated on its diagnostics findings."""
+import json
+import os
+import subprocess
 import sys
 
 import jax
@@ -45,4 +49,23 @@ for name in names:
     assert jnp.all(jnp.isfinite(dl)), name
     print(f"OK {name:24s} params={n:>10,} loss={float(loss):.3f} "
           f"step_loss={float(m['loss']):.3f}")
+
+# serve throughput smoke: paged-vs-contiguous oracle + speedup, folded
+# into the diagnostics gate (the paper's performance-verified-image bar:
+# an error finding fails the harness)
+from repro.core.diagnostics import Diagnostics  # noqa: E402
+
+repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+out = subprocess.run(
+    [sys.executable, os.path.join(repo, "benchmarks", "serve_throughput.py"),
+     "--smoke"], capture_output=True, text=True, cwd=repo)
+assert out.returncode == 0, out.stderr[-2000:]
+rec = json.loads(out.stdout.strip().splitlines()[-1])
+diag = Diagnostics()
+diag.extend(rec["findings"], source="serve_throughput")
+print(diag.render())
+assert diag.gate(), "serve throughput diagnostics gate failed"
+print(f"OK serve_throughput        speedup={rec['speedup']}x "
+      f"oracle_ok={rec['oracle_ok']} "
+      f"hit_rate={rec['paged']['prefix_hit_rate']}")
 print("ALL OK")

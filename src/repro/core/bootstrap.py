@@ -77,9 +77,10 @@ def init_benchmark(mesh_shape: tuple[int, ...], axes: tuple[str, ...],
 
     out: dict = {"mesh_shape": mesh_shape, "axes": axes}
 
+    from repro.parallel.ctx import mesh_of
+
     t0 = time.perf_counter()
-    mesh = jax.make_mesh(mesh_shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = mesh_of(mesh_shape, axes)
     out["mesh_construct_s"] = time.perf_counter() - t0
 
     n = mesh.devices.size

@@ -46,8 +46,11 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
     r"(" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\(", re.M)
+# the while operand may carry a nested tuple type, e.g.
+# ``while((s32[], f32[64,64]{1,0}) %tuple)`` — match lazily up to the
+# closing paren that precedes ``condition=``
 _WHILE_RE = re.compile(
-    r"while\([^)]*\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*?\)\s*->", re.M)
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
 _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")

@@ -89,6 +89,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             out_b = rec["memory"].get("output_size_in_bytes", 0)
             rec["memory"]["per_device_total"] = args_b + tmp_b + (out_b - alias_b)
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         rec["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float)) and (
                            "flops" in k or "bytes" in k or k in ("transcendentals",))}

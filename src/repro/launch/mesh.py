@@ -7,18 +7,19 @@ import jax
 from repro.configs.base import MeshConfig
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+# canonical version-compat helper lives in the layering-neutral
+# parallel.ctx; re-exported here where mesh construction is expected
+from repro.parallel.ctx import mesh_of  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return mesh_of(shape, axes)
 
 
 def make_mesh(cfg: MeshConfig):
-    return jax.make_mesh(cfg.shape, cfg.axes, axis_types=_auto(len(cfg.axes)))
+    return mesh_of(cfg.shape, cfg.axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:

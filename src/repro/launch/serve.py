@@ -1,7 +1,13 @@
-"""Serving driver: continuous-batching engine over a smoke-scale model.
+"""Serving driver: paged-KV engine over a smoke-scale model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
         --requests 8 --slots 4
+
+The paged path (prefix cache + chunked prefill + scheduler) is the
+default for attention-cache families; ``--engine contiguous`` selects the
+seed slot engine, which is also the automatic fallback for families the
+chunked decode does not cover (ssm/hybrid/vlm/encdec) and the
+dual-environment oracle for ``repro.serve.compare_engines``.
 """
 from __future__ import annotations
 
@@ -15,39 +21,56 @@ import numpy as np
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 
 
 def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
-          max_len: int = 96, max_new: int = 16, seed: int = 0) -> dict:
+          max_len: int = 96, max_new: int = 16, seed: int = 0,
+          engine: str = "paged", block_size: int = 8,
+          chunk: int = 4, shared_prefix: int = 0) -> dict:
     cfg = reduced(resolve_arch(arch))
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
-    engine = ServeEngine(model, params, slots=slots, max_len=max_len)
+
+    if engine == "paged" and cfg.family not in ("dense", "moe"):
+        engine = "contiguous"   # no chunked path for stateful caches yet
+    if engine == "paged":
+        eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                               block_size=block_size, chunk=chunk)
+    else:
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len)
 
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=shared_prefix).tolist()
     reqs = [
         Request(rid=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=rng.integers(4, 17)).tolist(),
+                prompt=prefix + rng.integers(
+                    0, cfg.vocab_size, size=rng.integers(4, 17)).tolist(),
                 max_new=max_new)
         for i in range(n_requests)
     ]
     t0 = time.time()
-    done = engine.run(reqs)
+    done = eng.run(reqs)
     wall = time.time() - t0
 
     ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
-    return {
+    out = {
         "arch": cfg.name,
-        "served": engine.stats.served,
-        "decode_steps": engine.stats.decode_steps,
-        "tokens_out": engine.stats.tokens_out,
-        "mean_batch_occupancy": round(engine.stats.mean_occupancy, 2),
+        "engine": engine,
+        "served": eng.stats.served,
+        "decode_steps": eng.stats.decode_steps,
+        "tokens_out": eng.stats.tokens_out,
+        "mean_batch_occupancy": round(eng.stats.mean_occupancy, 2),
         "mean_ttft_s": round(float(np.mean(ttfts)), 4) if ttfts else None,
-        "tokens_per_s": round(engine.stats.tokens_out / max(wall, 1e-9), 1),
+        "tokens_per_s": round(eng.stats.tokens_out / max(wall, 1e-9), 1),
         "wall_s": round(wall, 2),
     }
+    if engine == "paged":
+        rep = eng.report()
+        out.update({k: rep[k] for k in
+                    ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
+                     "page_peak_utilization", "preemptions")})
+    return out
 
 
 def main() -> None:
@@ -57,10 +80,18 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--engine", choices=["paged", "contiguous"],
+                    default="paged")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="length of a prompt prefix shared by all requests")
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, n_requests=args.requests,
                            slots=args.slots, max_len=args.max_len,
-                           max_new=args.max_new), indent=1))
+                           max_new=args.max_new, engine=args.engine,
+                           block_size=args.block_size, chunk=args.chunk,
+                           shared_prefix=args.shared_prefix), indent=1))
 
 
 if __name__ == "__main__":

@@ -240,3 +240,56 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
     y = out @ p["wo"]
     y = constrain(y, ("act_batch", None, None))
     return y, k_cache, v_cache
+
+
+def chunk_decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           pos: jax.Array, n_new: jax.Array):
+    """Multi-token decode against the cache (chunked prefill / decode mix).
+
+    x [B,C,D]; caches [B,Smax,KV,hd]; pos [B] is each lane's first write
+    position; n_new [B] in [0, C] is how many of the lane's C tokens are
+    real.  Rows beyond ``n_new`` are neither written to the cache nor
+    attended by valid queries — their outputs are garbage the caller
+    discards (the engine samples only from position ``n_new - 1``).
+
+    Query i of a lane attends cache positions j <= pos + i, so a chunk is
+    causally exact against both the pre-existing cache and itself.
+    Returns (y [B,C,D], new_k_cache, new_v_cache).
+    """
+    geom = head_geom(cfg, tp_size())
+    hd, kv, g = geom.head_dim, geom.n_kv, geom.group
+    b, c, _ = x.shape
+    s_max = k_cache.shape[1]
+
+    q = (x @ p["wq"]).reshape(b, c, kv, g, hd)
+    k_new = (x @ p["wk"]).reshape(b, c, kv, hd)
+    v_new = (x @ p["wv"]).reshape(b, c, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_scale"], q, cfg.norm_eps)
+        k_new = rmsnorm(p["k_scale"], k_new, cfg.norm_eps)
+    idx = pos[:, None] + jnp.arange(c)[None, :]            # [B,C]
+    if cfg.rope_theta > 0:
+        qf = q.reshape(b, c, kv * g, hd)
+        q = rope(qf, idx, cfg.rope_theta).reshape(b, c, kv, g, hd)
+        k_new = rope(k_new, idx, cfg.rope_theta)
+
+    # masked scatter: lanes write only their first n_new rows; out-of-range
+    # indices (padding lanes, idle slots) drop instead of wrapping
+    ok = jnp.arange(c)[None, :] < n_new[:, None]           # [B,C]
+    safe = jnp.where(ok, idx, s_max)
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, c))
+    k_cache = k_cache.at[bi, safe].set(k_new, mode="drop")
+    v_cache = v_cache.at[bi, safe].set(v_new, mode="drop")
+
+    scores = jnp.einsum("bckgh,bskh->bkgcs", q, k_cache,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(s_max)[None, None, :] <= idx[:, :, None]  # [B,C,S]
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgcs,bskh->bckgh", probs, v_cache)
+    out = out.reshape(b, c, kv * g * hd)
+    out = constrain(out, ("act_batch", None, "act_heads"))
+    y = out @ p["wo"]
+    y = constrain(y, ("act_batch", None, None))
+    return y, k_cache, v_cache

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import params as P
-from repro.models.attention import (decode_attention, full_attention,
-                                    tp_size)
+from repro.models.attention import (chunk_decode_attention, decode_attention,
+                                    full_attention, tp_size)
 from repro.models.layers import (embed_tokens, gelu_mlp, head_geom,
                                  logits_from, rmsnorm, sinusoidal_positions,
                                  swiglu)
@@ -391,3 +391,53 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_from(params["embed"], cfg, x)[:, 0]
     return logits, new_cache
+
+
+# ============================================================ chunked decode
+
+
+def decode_chunk(cfg: ModelConfig, params: dict, cache: dict,
+                 tokens: jax.Array, pos: jax.Array, n_new: jax.Array):
+    """C-token decode against the cache: the paged engine's single step.
+
+    tokens [B,C] int32, pos [B] int32 (first write position per lane),
+    n_new [B] int32 in [0, C] (how many of the lane's tokens are real; 0
+    marks an idle slot, 1 is a plain decode tick, >1 is a prefill chunk).
+    Prefill lanes consume C prompt tokens per call while decode lanes
+    advance one token in the same batched step — chunked prefill without a
+    second jitted program or shape polymorphism.
+
+    Returns (logits [B,Vpad] at each lane's last real position, new cache).
+    Only attention-cache families (dense/moe) support the chunked path;
+    other families serve through the contiguous engine.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise ValueError(f"decode_chunk supports dense/moe caches, got {fam}")
+    b = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        x, kc, vc = carry
+        p, i = xs
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, kc_i, vc_i = chunk_decode_attention(cfg, p["attn"], h,
+                                               _idx(kc, i), _idx(vc, i),
+                                               pos, n_new)
+        x = x + a
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if fam == "moe":
+            y, _ = moe_ffn(cfg, p["moe"], h2)
+        else:
+            y = swiglu(p["mlp"], h2)
+        return (x + y, _upd(kc, kc_i, i), _upd(vc, vc_i, i)), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["self"]["k"], cache["self"]["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+
+    last = jnp.maximum(n_new, 1) - 1
+    x_last = x[jnp.arange(b), last][:, None, :]
+    x_last = rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
+    logits = logits_from(params["embed"], cfg, x_last)[:, 0]
+    return logits, {"self": {"k": ks, "v": vs}}

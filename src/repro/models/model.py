@@ -53,6 +53,10 @@ class Model:
                     pos: jax.Array):
         return D.decode_step(self.cfg, params, cache, token, pos)
 
+    def decode_chunk(self, params: dict, cache: dict, tokens: jax.Array,
+                     pos: jax.Array, n_new: jax.Array):
+        return D.decode_chunk(self.cfg, params, cache, tokens, pos, n_new)
+
     def cache_specs(self, batch: int, seq_len: int):
         return D.cache_specs(self.cfg, batch, seq_len)
 

@@ -20,9 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.models import params as P
 from repro.parallel.ctx import _current
 
-shard_map = jax.shard_map if hasattr(jax, "shard_map") else None
-if shard_map is None:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.ctx import shard_map_compat
 
 
 def moe_specs(cfg: ModelConfig, layers: int | None) -> dict:
@@ -120,9 +118,8 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Arr
     def wrapped(p_loc, x_loc):
         return body(p_loc, x_loc)
 
-    return shard_map(
+    return shard_map_compat(
         wrapped, mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(x_spec, aux_spec),
-        check_vma=False,
     )(p, x)

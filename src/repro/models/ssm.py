@@ -302,12 +302,11 @@ def mamba_block_cp(cfg: ModelConfig, p: dict, x: jax.Array, *,
 
     from repro.parallel.ctx import _current
 
-    shard_map = jax.shard_map if hasattr(jax, "shard_map") else None
     ctx = _current()
     tp = ctx.axis_sizes.get("model", 1) if ctx else 1
     s = x.shape[1]
     applicable = (
-        ctx is not None and tp > 1 and shard_map is not None
+        ctx is not None and tp > 1
         and ctx.rules.get("act_res") == "model"
         and s % tp == 0 and (s // tp) % min(cfg.ssd_chunk, s // tp) == 0)
     if not applicable:
@@ -325,6 +324,7 @@ def mamba_block_cp(cfg: ModelConfig, p: dict, x: jax.Array, *,
                       jax.sharding.PartitionSpec(b_ax, None, None, None)))
     else:
         out_specs = x_spec
-    fn = shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
-                   out_specs=out_specs, check_vma=False)
+    from repro.parallel.ctx import shard_map_compat
+    fn = shard_map_compat(body, mesh=mesh, in_specs=(p_specs, x_spec),
+                          out_specs=out_specs)
     return fn(p, x)

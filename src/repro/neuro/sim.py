@@ -25,9 +25,7 @@ import jax.numpy as jnp
 from repro.neuro import cable
 from repro.neuro.ring import RingConfig, is_ring_head, source_of
 
-shard_map = jax.shard_map if hasattr(jax, "shard_map") else None
-if shard_map is None:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.ctx import shard_map_compat
 
 
 @dataclass
@@ -115,10 +113,9 @@ def simulate(cfg: RingConfig, *, mesh=None, axis: str = "cells",
         spec = jax.sharding.PartitionSpec(axis)
         state_specs = cable.CellState(
             v=spec, m=spec, h=spec, n=spec, g_syn=spec)
-        fn = shard_map(
+        fn = shard_map_compat(
             run, mesh=mesh, in_specs=(state_specs,),
-            out_specs=(state_specs, spec, jax.sharding.PartitionSpec()),
-            check_vma=False)
+            out_specs=(state_specs, spec, jax.sharding.PartitionSpec()))
     else:
         n_loc = cfg.n_cells
         fn = _run_local(cfg, n_loc, None, use_pallas)

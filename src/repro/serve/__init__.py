@@ -1,0 +1,20 @@
+"""Serving subsystem: paged KV cache, scheduler, and engines.
+
+- ``paging``: BlockAllocator / PrefixCache / KVPool (page-level memory).
+- ``scheduler``: FCFS + priority admission with preemption-on-OOM.
+- ``engine``: ServeEngine (contiguous oracle) and PagedServeEngine
+  (prefix caching + chunked prefill), tied together by
+  ``compare_engines`` — the dual-environment correctness verdict.
+"""
+from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
+                                compare_engines, token_matrix)
+from repro.serve.paging import (BlockAllocator, BlockAllocatorError, KVPool,
+                                PrefixCache, chain_hashes, pages_for)
+from repro.serve.scheduler import Plan, SchedEntry, Scheduler
+
+__all__ = [
+    "BlockAllocator", "BlockAllocatorError", "KVPool", "PrefixCache",
+    "PagedServeEngine", "Plan", "Request", "SchedEntry", "Scheduler",
+    "ServeEngine", "chain_hashes", "compare_engines", "pages_for",
+    "token_matrix",
+]

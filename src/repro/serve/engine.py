@@ -1,23 +1,32 @@
-"""Serving engine: slot-based KV cache + continuous batching.
+"""Serving engines: contiguous slot caches (oracle) and the paged path.
 
-The decode step is a fixed-shape jitted function over B slots; requests
-stream in, occupy a free slot (their prompt prefilled into the slot's cache
-rows), decode greedily until EOS/max_tokens, and release the slot.  This is
-the vLLM-style continuous-batching control loop expressed over the
-framework's fixed-shape ``decode_step`` — slot state lives in the engine,
-tensor state in the donated cache.
+``ServeEngine`` is the seed contiguous engine: a fixed-shape jitted
+``decode_step`` over B slots, serial per-token prefill at admission.  It is
+kept as the *dual-environment oracle* — the paged engine's correctness
+proof is a ``compare_engines`` verdict (core.verify.DualEnvHarness) that
+the two produce identical greedy token streams.
+
+``PagedServeEngine`` is the production path: a refcounted block allocator
++ hash-chained prefix cache (serve.paging) so overlapping prompts reuse KV
+pages instead of recomputing them, chunked prefill (``decode_chunk``) so a
+long prompt consumes C tokens per step in the same batched call that
+advances decoding lanes by one, and a priority scheduler
+(serve.scheduler) with preemption-on-OOM and recompute-on-readmit.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve.paging import (BlockAllocator, KVPool, PrefixCache,
+                                chain_hashes, pages_for)
+from repro.serve.scheduler import SchedEntry, Scheduler
 
 
 @dataclass
@@ -26,6 +35,7 @@ class Request:
     prompt: list[int]
     max_new: int = 32
     eos_id: int = -1            # -1: never stops early
+    priority: int = 0           # higher preempts lower on OOM (paged path)
     out: list[int] = field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0
@@ -115,3 +125,333 @@ class ServeEngine:
                 done.append(self.active.pop(slot))
                 self.stats.served += 1
         return done
+
+
+# ================================================================== paged
+
+
+def _chunk_fn_for(model: Model):
+    """One jitted chunk step per Model instance, shared by every engine
+    built on it (benchmark sweeps construct many engines; recompiling per
+    engine would dominate wall time).  Cached on the model itself so its
+    lifetime — and the compiled executables' — ends with the model."""
+    fn = getattr(model, "_chunk_jit", None)
+    if fn is None:
+        fn = jax.jit(model.decode_chunk, donate_argnums=(1,))
+        model._chunk_jit = fn
+    return fn
+
+
+@dataclass
+class PagedStats:
+    prefill_tokens: int = 0      # prompt tokens actually computed
+    cached_tokens: int = 0       # prompt tokens served from the prefix cache
+    admit_retries: int = 0       # admissions bounced by an intra-tick race
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        total = self.prefill_tokens + self.cached_tokens
+        return self.cached_tokens / total if total else 0.0
+
+
+@dataclass
+class _Slot:
+    entry: SchedEntry
+    req: Request
+    feed: list[int]              # prompt (clamped) + generated-so-far
+    hashes: list[int]            # chain hashes over full blocks of feed
+    pending: list[int]           # feed tokens not yet computed
+    consumed: int                # KV rows written (= next write position)
+    shared: list[int]            # matched prefix pages (refs held)
+    private: list[int]           # pages allocated for this request
+    registered: int              # full feed blocks registered / matched
+    reg_cursor: int = 0          # next private page usable for registration
+    next_input: int = -1         # decode-phase input token
+
+
+class PagedServeEngine:
+    """Paged-KV continuous batching: prefix reuse + chunked prefill.
+
+    Every step is one fixed-shape ``decode_chunk`` call: prefill lanes
+    feed up to ``chunk`` prompt tokens, decode lanes feed their last
+    sampled token, idle lanes feed nothing (n_new=0).  The dense per-slot
+    cache remains the jitted working set; the page pool holds registered
+    prefix KV that admissions copy in instead of recomputing.
+
+    Deterministic by construction: the scheduler runs on the engine's
+    synthetic tick clock, so a trace (prompts, priorities, arrivals)
+    replays to the same schedule and the same token streams.
+    """
+
+    def __init__(self, model: Model, params: Any, *, slots: int = 4,
+                 max_len: int = 256, block_size: int = 16,
+                 num_blocks: int | None = None, chunk: int = 8,
+                 tick_dt: float = 1.0):
+        if model.cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged engine needs an attention cache (dense/moe); "
+                f"{model.cfg.family!r} serves through ServeEngine")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.cache = model.zero_cache(slots, max_len)
+        k = self.cache["self"]["k"]          # (L, B, S, kv, hd)
+        layers, _, _, n_kv, hd = k.shape
+        if num_blocks is None:
+            num_blocks = 2 * slots * pages_for(max_len, block_size)
+        self.alloc = BlockAllocator(num_blocks, block_size)
+        self.prefix = PrefixCache(self.alloc)
+        self.pool = KVPool(num_blocks, block_size, layers, n_kv, hd, k.dtype)
+        self.now = 0.0
+        self.tick_dt = tick_dt
+        self.sched = Scheduler(slots=slots, clock=lambda: self.now)
+        self.active: dict[int, _Slot] = {}
+        self.stats = EngineStats()
+        self.pstats = PagedStats()
+        self.ttft_ticks: list[float] = []   # first-token latency, tick clock
+        self._chunk_fn = _chunk_fn_for(model)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request, *, arrival: float | None = None
+               ) -> SchedEntry:
+        # reject statically-unplaceable requests here, where only the bad
+        # request fails — once queued, it would starve everything behind
+        # it (strict head-of-line) without ever becoming admissible
+        worst = pages_for(len(self._feed_of(req)) + req.max_new,
+                          self.alloc.block_size)
+        if worst > self.alloc.num_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {worst} pages even fully "
+                f"recomputed; pool has {self.alloc.num_blocks}")
+        return self.sched.submit(
+            req, priority=req.priority,
+            arrival=self.now if arrival is None else arrival)
+
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _feed_of(self, req: Request) -> list[int]:
+        prompt = req.prompt[-(self.max_len - req.max_new):]
+        return list(prompt) + list(req.out)
+
+    def _cost(self, entry: SchedEntry) -> int:
+        """Net new pages if admitted now (prefix hits are shared, free)."""
+        req = entry.req
+        feed = self._feed_of(req)
+        total = pages_for(len(feed) + req.max_new - len(req.out),
+                          self.alloc.block_size)
+        matched = self.prefix.peek(feed, max_tokens=len(feed) - 1)
+        return total - matched // self.alloc.block_size
+
+    # ------------------------------------------------------------- admit
+    def _admit(self, entry: SchedEntry, slot: int) -> bool:
+        req: Request = entry.req
+        req.t_submit = req.t_submit or time.perf_counter()
+        bs = self.alloc.block_size
+        feed = self._feed_of(req)
+        total = pages_for(len(feed) + req.max_new - len(req.out), bs)
+        # leave ≥1 token to feed so the last-position logits exist
+        matched_len, shared = self.prefix.match(feed,
+                                                max_tokens=len(feed) - 1)
+        need = total - len(shared)
+        if need > self.alloc.num_free:
+            self.prefix.evict(need - self.alloc.num_free)
+        if need > self.alloc.num_free:
+            for bid in shared:      # lost an intra-tick race; stay waiting
+                self.alloc.decref(bid)
+            self.pstats.admit_retries += 1
+            return False
+        private = [self.alloc.alloc() for _ in range(need)]
+
+        if matched_len:             # prefix hit: pages -> slot rows, no math
+            kp, vp = self.pool.read(shared)
+            kc, vc = self.cache["self"]["k"], self.cache["self"]["v"]
+            self.cache["self"]["k"] = kc.at[:, slot, :matched_len].set(
+                jnp.asarray(kp[:, :matched_len]))
+            self.cache["self"]["v"] = vc.at[:, slot, :matched_len].set(
+                jnp.asarray(vp[:, :matched_len]))
+            self.pstats.cached_tokens += matched_len
+
+        self.active[slot] = _Slot(
+            entry=entry, req=req, feed=feed,
+            hashes=chain_hashes(feed, bs),
+            pending=feed[matched_len:], consumed=matched_len,
+            shared=shared, private=private, registered=matched_len // bs)
+        self.sched.mark_running(entry, slot, len(private))
+        return True
+
+    def _register_blocks(self, slot: int, st: _Slot) -> None:
+        """Publish newly completed full prompt blocks to the prefix cache
+        (copy rows out to a private page; first writer wins)."""
+        bs = self.alloc.block_size
+        while (st.registered < len(st.hashes)
+               and (st.registered + 1) * bs <= st.consumed):
+            h = st.hashes[st.registered]
+            if not self.prefix.contains(h) and st.reg_cursor < len(st.private):
+                bid = st.private[st.reg_cursor]
+                st.reg_cursor += 1
+                a, b = st.registered * bs, (st.registered + 1) * bs
+                self.pool.write(
+                    bid,
+                    np.asarray(self.cache["self"]["k"][:, slot, a:b]),
+                    np.asarray(self.cache["self"]["v"][:, slot, a:b]))
+                self.prefix.insert(h, bid)
+            st.registered += 1
+
+    # ------------------------------------------------------ release paths
+    def _release(self, st: _Slot) -> None:
+        for bid in st.shared:
+            self.alloc.decref(bid)
+        for bid in st.private:
+            self.alloc.decref(bid)   # registered pages survive via cache ref
+
+    def _preempt(self, entry: SchedEntry) -> None:
+        st = self.active.pop(entry.slot)
+        self._release(st)
+        self.sched.mark_preempted(entry)
+
+    def _finish(self, slot: int) -> Request:
+        st = self.active.pop(slot)
+        self._release(st)
+        self.sched.mark_done(st.entry)
+        self.stats.served += 1
+        return st.req
+
+    # --------------------------------------------------------------- tick
+    def _tick(self) -> list[Request]:
+        self.now += self.tick_dt
+        plan = self.sched.schedule(
+            free_slots=len(self._free_slots()),
+            free_pages=self.alloc.num_free + self.prefix.evictable(),
+            cost_fn=self._cost)
+        for victim in plan.preempt:
+            self._preempt(victim)
+        admitted = 0
+        for entry in plan.admit:
+            free = self._free_slots()
+            if not free:
+                break
+            if not self._admit(entry, free[0]):
+                break   # intra-tick race: keep strict head-of-line order
+            admitted += 1
+        if not self.active:
+            if (admitted == 0 and not plan.preempt and self.sched.waiting
+                    and all(e.arrival <= self.now
+                            for e in self.sched.waiting)):
+                raise RuntimeError(
+                    "paged engine cannot place any waiting request: "
+                    f"need more than {self.alloc.num_blocks} pages/"
+                    f"{self.slots} slots")
+            return []
+
+        toks = np.zeros((self.slots, self.chunk), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        n_new = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            pos[slot] = st.consumed
+            if st.pending:
+                n = min(self.chunk, len(st.pending))
+                toks[slot, :n] = st.pending[:n]
+                n_new[slot] = n
+            else:
+                toks[slot, 0] = st.next_input
+                n_new[slot] = 1
+
+        logits, self.cache = self._chunk_fn(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(n_new))
+        self.stats.decode_steps += 1
+        self.stats.batch_occupancy.append(len(self.active))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+        finished: list[int] = []
+        for slot, st in self.active.items():
+            req, n = st.req, int(n_new[slot])
+            st.consumed += n
+            if st.pending:
+                st.pending = st.pending[n:]
+                self.pstats.prefill_tokens += n
+                self._register_blocks(slot, st)
+                if st.pending:
+                    continue        # mid-prefill: this lane's logits unused
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.stats.tokens_out += 1
+            if not req.t_first:
+                self.ttft_ticks.append(self.now - st.entry.arrival)
+                req.t_first = time.perf_counter()
+            st.next_input = tok
+            if (tok == req.eos_id or len(req.out) >= req.max_new
+                    or st.consumed >= self.max_len - 1):
+                req.t_done = time.perf_counter()
+                finished.append(slot)
+        return [self._finish(slot) for slot in finished]
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: list[Request],
+            arrivals: list[float] | None = None) -> list[Request]:
+        for i, req in enumerate(requests):
+            self.submit(req, arrival=arrivals[i] if arrivals else None)
+        done: list[Request] = []
+        while self.sched.has_work():
+            done.extend(self._tick())
+        return done
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict:
+        return {
+            "engine": "paged",
+            "served": self.stats.served,
+            "decode_steps": self.stats.decode_steps,
+            "tokens_out": self.stats.tokens_out,
+            "mean_batch_occupancy": round(self.stats.mean_occupancy, 2),
+            "prefill_tokens": self.pstats.prefill_tokens,
+            "cached_tokens": self.pstats.cached_tokens,
+            "prefix_hit_rate": round(self.pstats.prefix_hit_rate, 3),
+            "page_peak_utilization": round(
+                self.alloc.stats.peak_in_use / self.alloc.num_blocks, 3),
+            "pages": self.alloc.num_blocks,
+            "preemptions": self.sched.stats.preemptions,
+        }
+
+
+# ================================================================= oracle
+
+
+def token_matrix(done: list[Request], n_requests: int,
+                 max_new: int) -> np.ndarray:
+    """Greedy output streams as a dense int matrix (pad = -1), rid-ordered
+    so completion order does not affect the comparison."""
+    out = np.full((n_requests, max_new), -1, np.int64)
+    for r in done:
+        out[r.rid, :len(r.out)] = r.out
+    return out
+
+
+def compare_engines(model: Model, params: Any,
+                    make_requests: Callable[[], list[Request]], *,
+                    slots: int = 2, max_len: int = 64, block_size: int = 8,
+                    chunk: int = 4, repeats: int = 1):
+    """The paged engine's correctness proof, in the paper's methodology:
+    the same workload under two environments (contiguous oracle vs paged)
+    must agree token-for-token.  Returns a core.verify.DualEnvReport whose
+    verdicts CI gates on."""
+    from repro.core.verify import DualEnvHarness
+
+    probe = make_requests()
+    n, max_new = len(probe), max(r.max_new for r in probe)
+
+    def run_contiguous():
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len)
+        return token_matrix(eng.run(make_requests()), n, max_new)
+
+    def run_paged():
+        eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                               block_size=block_size, chunk=chunk)
+        return token_matrix(eng.run(make_requests()), n, max_new)
+
+    harness = DualEnvHarness(repeats=repeats, warmup=0)
+    return harness.compare("contiguous", run_contiguous,
+                           "paged", run_paged, rtol=1e-9, atol=0.5)

@@ -1,0 +1,281 @@
+"""Paged KV cache: block allocator, prefix cache, and physical page pool.
+
+vLLM-style memory management for the serving engine, sized for the
+framework's fixed-shape decode path:
+
+- ``BlockAllocator`` hands out fixed-size logical pages from a free list
+  and refcounts them so pages can be *shared* between requests (and with
+  the prefix cache) without copies.  Double-free and unknown-block frees
+  raise — the allocator is the invariant-bearing layer the property tests
+  hammer.
+- ``PrefixCache`` maps hash-chained token blocks to pages holding their
+  KV, so requests with a shared prompt prefix reuse the pages instead of
+  recomputing prefill.  Registered pages are immutable; readers hold a
+  refcount (copy-on-write at page granularity: writers always write into
+  freshly allocated pages).
+- ``KVPool`` is the physical storage for registered pages — host numpy
+  arrays of shape ``(layers, num_blocks, block_size, kv_heads, head_dim)``
+  per k/v, written once at registration and gathered at admission.
+
+The engine keeps a dense per-slot working cache for the jitted decode
+step (fixed shapes); paging governs *admission* (prefix reuse), *capacity*
+(page accounting + preemption-on-OOM), and *sharing* (refcounts).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+
+class BlockAllocatorError(RuntimeError):
+    """Raised on allocator misuse (double free, unknown block, OOM)."""
+
+
+@dataclass
+class BlockStats:
+    allocs: int = 0
+    frees: int = 0
+    peak_in_use: int = 0
+    oom_events: int = 0
+
+
+class BlockAllocator:
+    """Fixed-size page allocator with refcounted sharing.
+
+    Blocks are integers in ``[0, num_blocks)``.  ``alloc`` returns a block
+    with refcount 1; ``incref`` adds a reader; ``decref`` releases one
+    reference and returns the block to the free list when the count hits
+    zero.  All misuse raises ``BlockAllocatorError``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError((num_blocks, block_size))
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: recently freed pages are reused first (warm rows)
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: dict[int, int] = {}
+        self.stats = BlockStats()
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    # ------------------------------------------------------------ lifecycle
+    def alloc(self) -> int:
+        if not self._free:
+            self.stats.oom_events += 1
+            raise BlockAllocatorError("out of pages")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        self.stats.allocs += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return bid
+
+    def incref(self, bid: int) -> None:
+        if bid not in self._ref:
+            raise BlockAllocatorError(f"incref on unallocated block {bid}")
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> None:
+        ref = self._ref.get(bid)
+        if ref is None:
+            raise BlockAllocatorError(f"free of unallocated block {bid}")
+        if ref <= 0:  # pragma: no cover - guarded by deletion below
+            raise BlockAllocatorError(f"double free of block {bid}")
+        self._ref[bid] = ref - 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            self._free.append(bid)
+            self.stats.frees += 1
+
+    def check(self) -> None:
+        """Invariant audit: every block is either free or refcounted ≥ 1."""
+        assert len(self._free) + len(self._ref) == self.num_blocks
+        assert all(r >= 1 for r in self._ref.values())
+        assert len(set(self._free)) == len(self._free)
+        assert not (set(self._free) & set(self._ref))
+
+
+# ================================================================= hashing
+
+
+def chain_hashes(tokens: Sequence[int], block_size: int) -> list[int]:
+    """Hash chain over full token blocks: ``h_i = H(h_{i-1}, block_i)``.
+
+    Only complete blocks participate (partial tails are never cached), so
+    two prompts share cache entries exactly up to their common full-block
+    prefix.  blake2b/8-byte digests keep collisions negligible at serving
+    scale while staying deterministic across processes.
+    """
+    out: list[int] = []
+    prev = 0
+    for start in range(0, (len(tokens) // block_size) * block_size,
+                       block_size):
+        block = tokens[start:start + block_size]
+        h = hashlib.blake2b(
+            np.asarray([prev, *block], dtype=np.uint64).tobytes(),
+            digest_size=8)
+        prev = int.from_bytes(h.digest(), "little")
+        out.append(prev)
+    return out
+
+
+@dataclass
+class PrefixStats:
+    lookups: int = 0
+    hit_blocks: int = 0
+    miss_blocks: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    hit_tokens: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_blocks + self.miss_blocks
+        return self.hit_blocks / total if total else 0.0
+
+
+class PrefixCache:
+    """Content-addressed map from token-block hash chains to pages.
+
+    The cache holds one reference on every registered page (so pages
+    survive their writer's completion); ``match`` adds one reference per
+    matched page on behalf of the caller.  Pages whose only reference is
+    the cache's own are *evictable* — ``evict`` reclaims them LRU-first
+    under allocator pressure.
+    """
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self._map: OrderedDict[int, int] = OrderedDict()  # chain hash -> bid
+        self.stats = PrefixStats()
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    # ------------------------------------------------------------- lookup
+    def match(self, tokens: Sequence[int], *,
+              max_tokens: int | None = None) -> tuple[int, list[int]]:
+        """Longest cached prefix of ``tokens``: ``(n_tokens, block_ids)``.
+
+        Caller owns one reference per returned block (release via
+        ``allocator.decref``).  ``max_tokens`` caps the match so callers
+        can keep at least one token to feed through the model.
+        """
+        bs = self.allocator.block_size
+        self.stats.lookups += 1
+        bids: list[int] = []
+        for h in chain_hashes(tokens, bs):
+            if max_tokens is not None and (len(bids) + 1) * bs > max_tokens:
+                break
+            bid = self._map.get(h)
+            if bid is None:
+                self.stats.miss_blocks += 1
+                break
+            self._map.move_to_end(h)  # LRU touch
+            self.allocator.incref(bid)
+            bids.append(bid)
+            self.stats.hit_blocks += 1
+        self.stats.hit_tokens += len(bids) * bs
+        return len(bids) * bs, bids
+
+    def peek(self, tokens: Sequence[int], *,
+             max_tokens: int | None = None) -> int:
+        """Matched-token count without taking references (for cost models)."""
+        bs = self.allocator.block_size
+        n = 0
+        for h in chain_hashes(tokens, bs):
+            if max_tokens is not None and n + bs > max_tokens:
+                break
+            if h not in self._map:
+                break
+            n += bs
+        return n
+
+    # ----------------------------------------------------------- register
+    def contains(self, chain_hash: int) -> bool:
+        return chain_hash in self._map
+
+    def insert(self, chain_hash: int, bid: int) -> bool:
+        """Register a page under its chain hash.  The cache takes its own
+        reference.  Returns False (no ref taken) if the hash is already
+        registered — first writer wins, the loser keeps its private page."""
+        if chain_hash in self._map:
+            return False
+        self.allocator.incref(bid)
+        self._map[chain_hash] = bid
+        self.stats.insertions += 1
+        return True
+
+    # ------------------------------------------------------------ evict
+    def evictable(self) -> int:
+        return sum(1 for bid in self._map.values()
+                   if self.allocator.refcount(bid) == 1)
+
+    def evict(self, n_blocks: int) -> int:
+        """Drop up to ``n_blocks`` pages held only by the cache, LRU first.
+        Returns how many were reclaimed."""
+        reclaimed = 0
+        for h in list(self._map):
+            if reclaimed >= n_blocks:
+                break
+            bid = self._map[h]
+            if self.allocator.refcount(bid) == 1:
+                del self._map[h]
+                self.allocator.decref(bid)
+                self.stats.evictions += 1
+                reclaimed += 1
+        return reclaimed
+
+
+# ================================================================= storage
+
+
+class KVPool:
+    """Physical page storage for registered prefix KV (host memory).
+
+    One (k, v) row-block per page: ``(layers, block_size, kv, hd)``.
+    Written once at registration; gathered into a slot's dense working
+    cache at admission.  Host numpy keeps the pool off the device and the
+    jitted decode step's shapes fixed.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, layers: int,
+                 n_kv: int, head_dim: int, dtype):
+        shape = (layers, num_blocks, block_size, n_kv, head_dim)
+        self.k = np.zeros(shape, dtype=dtype)
+        self.v = np.zeros(shape, dtype=dtype)
+        self.block_size = block_size
+
+    def write(self, bid: int, k_rows: np.ndarray, v_rows: np.ndarray) -> None:
+        """k_rows/v_rows: (layers, block_size, kv, hd)."""
+        self.k[:, bid] = k_rows
+        self.v[:, bid] = v_rows
+
+    def read(self, bids: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Gather pages -> (layers, len(bids)*block_size, kv, hd)."""
+        idx = np.asarray(list(bids), dtype=np.int64)
+        k = self.k[:, idx]  # (L, n, bs, kv, hd)
+        v = self.v[:, idx]
+        n = idx.shape[0] * self.block_size
+        return (k.reshape(k.shape[0], n, *k.shape[3:]),
+                v.reshape(v.shape[0], n, *v.shape[3:]))
+
+
+def pages_for(n_tokens: int, block_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` KV rows."""
+    return -(-max(n_tokens, 0) // block_size)

@@ -1,0 +1,146 @@
+"""Request scheduler: FCFS within priority, preemption on OOM.
+
+The scheduler is deliberately model-free: it sees abstract entries with a
+priority, an arrival time, and a page cost (computed by the engine's cost
+function, which nets out prefix-cache hits), and produces a ``Plan`` of
+admissions and preemptions.  The engine executes the plan; the clock is
+injected so tests drive it with a synthetic timeline and get byte-for-byte
+deterministic schedules.
+
+Policy
+------
+- Admission order: higher priority first, then submission order (FCFS).
+  Head-of-line within the sorted order is strict: if the head candidate
+  cannot be placed (even after preemption), nothing behind it is admitted
+  — this keeps FCFS provable in tests and avoids starving big requests.
+- Preemption: a candidate that cannot be placed may evict running entries
+  of *strictly lower* priority (lowest priority first, most recently
+  submitted first — the cheapest recompute), reclaiming their slot and
+  pages.  Preempted entries return to the waiting queue keeping their
+  original submission order and are *recomputed* on readmission (the
+  engine re-prefills prompt + generated-so-far; under greedy decoding the
+  final stream is identical to an uninterrupted run).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+WAITING = "waiting"
+RUNNING = "running"
+PREEMPTED = "preempted"
+DONE = "done"
+
+
+@dataclass
+class SchedEntry:
+    req: Any
+    priority: int = 0          # higher wins
+    arrival: float = 0.0       # clock time the request becomes visible
+    seq: int = 0               # submission order (FCFS tiebreak)
+    state: str = WAITING
+    slot: int | None = None
+    held_pages: int = 0        # set by the engine at admission
+    preemptions: int = 0
+    t_admitted: float = 0.0
+
+
+@dataclass
+class Plan:
+    admit: list[SchedEntry] = field(default_factory=list)
+    preempt: list[SchedEntry] = field(default_factory=list)
+
+
+@dataclass
+class SchedStats:
+    admissions: int = 0
+    preemptions: int = 0
+    readmissions: int = 0
+
+
+class Scheduler:
+    def __init__(self, *, slots: int,
+                 clock: Callable[[], float] | None = None):
+        self.slots = slots
+        self.clock = clock or time.perf_counter
+        self._seq = itertools.count()
+        self.waiting: list[SchedEntry] = []
+        self.running: list[SchedEntry] = []
+        self.stats = SchedStats()
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Any, *, priority: int = 0,
+               arrival: float | None = None) -> SchedEntry:
+        e = SchedEntry(req=req, priority=priority,
+                       arrival=self.clock() if arrival is None else arrival,
+                       seq=next(self._seq))
+        self.waiting.append(e)
+        return e
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def active(self) -> int:
+        return len(self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------ planning
+    def schedule(self, *, free_slots: int, free_pages: int,
+                 cost_fn: Callable[[SchedEntry], int]) -> Plan:
+        """One planning pass.  ``free_pages`` should include pages the
+        engine can reclaim from the prefix cache (evictable); ``cost_fn``
+        returns net new pages an entry needs if admitted now."""
+        now = self.clock()
+        plan = Plan()
+        ready = sorted((e for e in self.waiting if e.arrival <= now),
+                       key=lambda e: (-e.priority, e.seq))
+        # victim pool: lowest priority first, most recent first
+        victims = sorted(self.running, key=lambda e: (e.priority, -e.seq))
+        for cand in ready:
+            need = cost_fn(cand)
+            # tentative victim picks: committed only if they buy admission
+            picked: list[SchedEntry] = []
+            slots_if, pages_if = free_slots, free_pages
+            while (slots_if <= 0 or pages_if < need) and victims:
+                v = victims[0]
+                if v.priority >= cand.priority:
+                    break  # never preempt equal-or-higher priority
+                victims.pop(0)
+                picked.append(v)
+                slots_if += 1
+                pages_if += v.held_pages
+            if slots_if > 0 and pages_if >= need:
+                plan.preempt.extend(picked)
+                plan.admit.append(cand)
+                free_slots, free_pages = slots_if - 1, pages_if - need
+            else:
+                victims = picked + victims   # un-pick: admission failed
+                break  # strict head-of-line: preserve FCFS order
+        return plan
+
+    # ------------------------------------------------------- state changes
+    def mark_running(self, e: SchedEntry, slot: int, held_pages: int) -> None:
+        if e.state == PREEMPTED:
+            self.stats.readmissions += 1
+        self.waiting.remove(e)
+        self.running.append(e)
+        e.state, e.slot, e.held_pages = RUNNING, slot, held_pages
+        e.t_admitted = self.clock()
+        self.stats.admissions += 1
+
+    def mark_preempted(self, e: SchedEntry) -> None:
+        self.running.remove(e)
+        self.waiting.append(e)
+        e.state, e.slot, e.held_pages = PREEMPTED, None, 0
+        e.preemptions += 1
+        self.stats.preemptions += 1
+
+    def mark_done(self, e: SchedEntry) -> None:
+        self.running.remove(e)
+        e.state, e.slot, e.held_pages = DONE, None, 0

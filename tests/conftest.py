@@ -1,10 +1,82 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real single
-CPU device; only launch/dryrun.py creates the 512 placeholder devices."""
+"""Shared fixtures + a hypothesis fallback so property tests always run.
+
+NOTE: no XLA_FLAGS here — tests run on the real single CPU device; only
+launch/dryrun.py creates the 512 placeholder devices.
+
+The property-test modules guard their ``hypothesis`` import and fall back
+to the tiny deterministic property loop below (``given``/``settings``/
+``st``), so the invariant suites collect and run with or without the
+dependency installed — hypothesis shrinks better, but the invariants are
+always exercised.
+"""
+import functools
+import inspect
+import zlib
+
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, reduced
 from repro.configs.base import ShapeConfig
+
+
+# ----------------------------------------------------- property-loop shim
+
+
+class _Sampler:
+    """A hypothesis-strategy stand-in: draws one value from an rng."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _StFallback:
+    """Subset of ``hypothesis.strategies`` the suites use."""
+
+    @staticmethod
+    def integers(lo, hi):
+        return _Sampler(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def floats(lo, hi):
+        return _Sampler(lambda rng: float(rng.uniform(lo, hi)))
+
+    @staticmethod
+    def sampled_from(items):
+        seq = list(items)
+        return _Sampler(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+st = _StFallback()
+
+
+def settings(max_examples=20, **_ignored):
+    """Fallback ``hypothesis.settings``: records the example budget."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*samplers):
+    """Fallback ``hypothesis.given``: a deterministic random property loop.
+    The rng is seeded from the test name (stable across runs/processes);
+    failures report the drawn arguments via the assertion traceback."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_max_examples", None)
+                 or getattr(fn, "_max_examples", None) or 20)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode("utf-8")))
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in samplers], **kwargs)
+        # pytest must not see the property arguments as fixtures
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
 
 
 @pytest.fixture(scope="session")

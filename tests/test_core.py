@@ -15,6 +15,7 @@ from repro.core import (Diagnostics, DualEnvHarness, Manifest, PortableEnv,
                         WireUp, constant_vs_scaling_overhead, diff,
                         init_benchmark, parse_hlo)
 from repro.core.inspector import hlo_cost
+from repro.launch.mesh import mesh_of
 
 
 # ------------------------------------------------------------ manifest
@@ -36,8 +37,7 @@ def test_manifest_diff_classifies_portable_vs_host():
     lines = diff(a, b)
     assert any("portable.shape" in line for line in lines)
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_of((1, 1), ("data", "model"))
     a.bind(mesh)
     b2 = Manifest.from_json(a.to_json())
     assert diff(a, b2) == []
@@ -70,8 +70,8 @@ def test_inspector_finds_collectives_in_real_module():
         from jax.sharding import NamedSharding, PartitionSpec as P
         import sys; sys.path.insert(0, "src")
         from repro.core.inspector import parse_hlo
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import mesh_of
+        mesh = mesh_of((8,), ("d",))
         x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         f = lambda x, w: (x @ w).sum()

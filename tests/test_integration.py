@@ -35,8 +35,8 @@ def test_sharded_loss_parity(arch):
         from repro.launch.bind import batch_shardings, param_shardings
         from repro.models import build
         from repro.parallel import bind, rules_for
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import mesh_of
+        mesh = mesh_of((2, 2, 2), ("pod", "data", "model"))
         cfg = reduced(ALL_ARCHS["{arch}"])
         model = build(cfg)
         shape = ShapeConfig("t", "train", 32, 4)
@@ -81,6 +81,44 @@ def test_serve_engine_continuous_batching():
     assert res["served"] == 5
     assert res["tokens_out"] >= 5 * 8 - 5
     assert 1.0 <= res["mean_batch_occupancy"] <= 2.0
+
+
+def test_paged_engine_matches_contiguous_oracle():
+    """The paged engine's correctness proof: on a batch of
+    overlapping-prefix prompts, the paged path (prefix-cache reuse +
+    chunked prefill + paged admission) must produce exactly the greedy
+    token streams of the seed contiguous engine, asserted through a
+    core.verify dual-environment verdict — the same methodology the paper
+    uses for native-vs-container parity."""
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import PagedServeEngine, Request, compare_engines
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=18).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=4 + i).tolist()
+             for i in range(4)]
+
+    def make():
+        return [Request(rid=i, prompt=shared + tails[i], max_new=8)
+                for i in range(4)]
+
+    report = compare_engines(model, params, make, slots=2, max_len=64,
+                             block_size=8, chunk=4)
+    assert report.ok, report.summary()
+    [verdict] = report.verdicts
+    assert verdict.kind == "numeric" and verdict.measured == 0.0
+
+    # the parity must come with actual page reuse, not a degenerate cache
+    eng = PagedServeEngine(model, params, slots=2, max_len=64,
+                           block_size=8, chunk=4)
+    eng.run(make())
+    assert eng.pstats.cached_tokens > 0
+    assert eng.report()["prefix_hit_rate"] > 0
+    eng.alloc.check()
 
 
 def test_decode_matches_prefill_continuation():

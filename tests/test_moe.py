@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # invariants still run via the conftest property loop
+    from conftest import given, settings, st
 
 from repro.configs import ALL_ARCHS, reduced
 from repro.models.moe import _capacity, _moe_local, moe_specs

@@ -80,8 +80,8 @@ def test_distributed_equals_single_device():
         cfg = RingConfig(n_cells=32, t_end_ms=30.0,
                          cell=CellConfig(n_compartments=4))
         ref = simulate(cfg)
-        mesh = jax.make_mesh((4,), ("cells",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import mesh_of
+        mesh = mesh_of((4,), ("cells",))
         dist = simulate(cfg, mesh=mesh)
         assert np.array_equal(np.asarray(ref.spike_counts),
                               np.asarray(dist.spike_counts))

@@ -57,8 +57,8 @@ def test_sp_rules_move_fewer_bytes_than_no_sp():
         from repro.parallel import bind, rules_for
         import dataclasses
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import mesh_of
+        mesh = mesh_of((2, 4), ("data", "model"))
         # scale matters: the GSPMD fallback replicates the per-chunk state
         # tensor (scales with B*S) while cp pays fixed weight/state-summary
         # gathers — the crossover needs a non-toy sequence length.
@@ -118,8 +118,8 @@ def test_decode_seq_sharded_cache_parity():
         pos = jnp.full((2,), s, jnp.int32)
         ref, _ = jax.jit(model.decode_step)(params, cache, tok, pos)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import mesh_of
+        mesh = mesh_of((2, 4), ("data", "model"))
         drun = RunConfig(model=cfg,
                          shape=ShapeConfig("d", "decode", s + 2, 2),
                          rules="serve")

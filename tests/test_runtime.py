@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import DataConfig, DataPipeline, batch_at
+from repro.launch.mesh import mesh_of
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.health import (HealthRegistry, HostState, plan_restart)
 from repro.runtime.straggler import StragglerTracker
@@ -69,8 +70,7 @@ def test_checkpoint_elastic_restore_new_sharding(tmp_path):
     mgr = CheckpointManager(tmp_path)
     state = _state()
     mgr.save(5, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_of((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     shardings = jax.tree.map(lambda _: sh, state)
     restored = mgr.restore(5, like=state, shardings=shardings)
@@ -205,6 +205,7 @@ def test_elastic_restore_across_device_counts(tmp_path):
         from repro.configs import ALL_ARCHS, reduced, ShapeConfig
         from repro.configs.base import RunConfig, TrainConfig
         from repro.launch.bind import batch_shardings, state_shardings
+        from repro.launch.mesh import mesh_of
         from repro.models import build
         from repro.parallel import bind, rules_for
         from repro.runtime.checkpoint import CheckpointManager
@@ -227,15 +228,17 @@ def test_elastic_restore_across_device_counts(tmp_path):
                 if restore:
                     state = mgr.restore(None, like=state, shardings=st_sh)
                 state = jax.device_put(state, st_sh)
-                jitted = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                # fresh callable per mesh binding: older jax keys the trace
+                # cache on function identity only, so reusing step_fn would
+                # replay mesh-A sharding constraints under mesh B
+                jitted = jax.jit(lambda st, b: step_fn(st, b),
+                                 in_shardings=(st_sh, b_sh),
                                  out_shardings=(st_sh, None))
                 state, m = jitted(state, jax.device_put(batch, b_sh))
                 return state, float(m["loss"])
 
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        mesh8 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh4 = mesh_of((2, 2), ("data", "model"))
+        mesh8 = mesh_of((2, 4), ("data", "model"))
         state, loss_a = one_step(mesh4, restore=False)
         mgr.save(1, state)
         # continue on the 4-device mesh vs restore onto the 8-device mesh

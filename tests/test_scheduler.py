@@ -1,0 +1,200 @@
+"""Deterministic scheduler tests on a synthetic clock, plus the
+evict-and-recompute equivalence proof on the real paged engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import (DONE, PREEMPTED, RUNNING, WAITING, Plan,
+                                   Scheduler)
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _sched(slots=1):
+    clock = Clock()
+    return Scheduler(slots=slots, clock=clock), clock
+
+
+def _no_cost(_entry) -> int:
+    return 0
+
+
+# ----------------------------------------------------------------- FCFS
+
+
+def test_fcfs_ordering_within_priority():
+    sched, _ = _sched(slots=1)
+    a = sched.submit("a")
+    b = sched.submit("b")
+    c = sched.submit("c")
+    admitted = []
+    for _ in range(3):
+        plan = sched.schedule(free_slots=1, free_pages=0, cost_fn=_no_cost)
+        assert not plan.preempt
+        [e] = plan.admit                      # strict head-of-line
+        sched.mark_running(e, slot=0, held_pages=0)
+        admitted.append(e)
+        sched.mark_done(e)
+    assert [e.req for e in admitted] == ["a", "b", "c"]
+    assert all(e.state == DONE for e in (a, b, c))
+
+
+def test_priority_beats_submission_order():
+    sched, _ = _sched(slots=1)
+    lo = sched.submit("lo", priority=0)
+    hi = sched.submit("hi", priority=3)
+    plan = sched.schedule(free_slots=1, free_pages=0, cost_fn=_no_cost)
+    assert plan.admit[0] is hi
+    assert lo.state == WAITING
+
+
+def test_arrivals_gate_on_the_synthetic_clock():
+    sched, clock = _sched(slots=2)
+    late = sched.submit("late", arrival=10.0)
+    plan = sched.schedule(free_slots=2, free_pages=0, cost_fn=_no_cost)
+    assert not plan.admit
+    clock.t = 10.0
+    plan = sched.schedule(free_slots=2, free_pages=0, cost_fn=_no_cost)
+    assert plan.admit == [late]
+
+
+def test_page_cost_blocks_admission_and_head_of_line_holds():
+    """A request that does not fit page-wise blocks everything behind it
+    (no FCFS bypass), even with free slots."""
+    sched, _ = _sched(slots=2)
+    big = sched.submit("big")
+    sched.submit("small")
+    cost = {"big": 8, "small": 1}
+    plan = sched.schedule(free_slots=2, free_pages=4,
+                          cost_fn=lambda e: cost[e.req])
+    assert not plan.admit and not plan.preempt
+    plan = sched.schedule(free_slots=2, free_pages=9,
+                          cost_fn=lambda e: cost[e.req])
+    assert [e.req for e in plan.admit] == ["big", "small"]
+    assert plan.admit[0] is big
+
+
+# ------------------------------------------------------------ preemption
+
+
+def test_preempts_lowest_priority_most_recent_victim():
+    sched, _ = _sched(slots=2)
+    v1 = sched.submit("v1", priority=0)
+    v2 = sched.submit("v2", priority=0)
+    for e, slot in ((v1, 0), (v2, 1)):
+        sched.mark_running(e, slot=slot, held_pages=2)
+    hi = sched.submit("hi", priority=5)
+    plan = sched.schedule(free_slots=0, free_pages=0,
+                          cost_fn=lambda e: 2)
+    assert plan.admit == [hi]
+    assert plan.preempt == [v2]               # most recent lower-pri victim
+    sched.mark_preempted(v2)
+    assert v2.state == PREEMPTED and v2.preemptions == 1
+    assert v2 in sched.waiting                # recompute on readmission
+
+
+def test_never_preempts_equal_or_higher_priority():
+    sched, _ = _sched(slots=1)
+    run = sched.submit("run", priority=2)
+    sched.mark_running(run, slot=0, held_pages=1)
+    sched.submit("same", priority=2)
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=_no_cost)
+    assert not plan.admit and not plan.preempt
+    assert run.state == RUNNING
+
+
+def test_preempted_entry_resumes_before_later_arrivals():
+    """A preempted request keeps its submission order: it readmits ahead
+    of same-priority requests submitted after it."""
+    sched, _ = _sched(slots=1)
+    first = sched.submit("first", priority=0)
+    sched.mark_running(first, slot=0, held_pages=1)
+    sched.submit("second", priority=0)
+    hi = sched.submit("hi", priority=9)
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=_no_cost)
+    assert plan.admit == [hi] and plan.preempt == [first]
+    sched.mark_preempted(first)
+    sched.mark_running(hi, slot=0, held_pages=1)
+    sched.mark_done(hi)
+    plan = sched.schedule(free_slots=1, free_pages=1, cost_fn=_no_cost)
+    assert plan.admit[0] is first             # ahead of "second"
+
+
+def test_no_futile_preemption_when_admission_stays_impossible():
+    """Victims are only evicted if that actually buys the admission: a
+    request too big to ever fit must not flush lower-priority work."""
+    sched, _ = _sched(slots=1)
+    lo = sched.submit("lo", priority=0)
+    sched.mark_running(lo, slot=0, held_pages=1)
+    sched.submit("huge", priority=5)
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=lambda e: 100)
+    assert not plan.admit and not plan.preempt
+    assert lo.state == RUNNING
+
+
+# ----------------------------------- evict-and-recompute on the real engine
+
+
+def test_preempted_request_output_matches_uninterrupted_run():
+    """The scheduler's recompute-on-readmit contract, proven on the real
+    engine: a low-priority request preempted by a high-priority arrival
+    must produce exactly the token stream of an uninterrupted run (greedy
+    decoding is deterministic; readmission re-prefills prompt + generated
+    tokens, prefix-cache hits included)."""
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import PagedServeEngine, Request
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    p_lo = rng.integers(0, cfg.vocab_size, size=12).tolist()
+    p_hi = rng.integers(0, cfg.vocab_size, size=12).tolist()
+
+    # uninterrupted baseline: same geometry, ample pages, alone
+    base = PagedServeEngine(model, params, slots=1, max_len=48,
+                            block_size=4, chunk=4)
+    [alone] = base.run([Request(rid=0, prompt=list(p_lo), max_new=10)])
+
+    # constrained: one slot, few pages; the high-priority arrival preempts
+    eng = PagedServeEngine(model, params, slots=1, max_len=48,
+                           block_size=4, num_blocks=8, chunk=4)
+    done = eng.run(
+        [Request(rid=0, prompt=list(p_lo), max_new=10, priority=0),
+         Request(rid=1, prompt=list(p_hi), max_new=6, priority=5)],
+        arrivals=[0.0, 5.0])
+    out = {r.rid: r.out for r in done}
+
+    assert eng.sched.stats.preemptions >= 1
+    assert eng.sched.stats.readmissions >= 1
+    assert out[0] == alone.out                # token-for-token equivalence
+    assert len(out[1]) == 6
+    eng.alloc.check()
+    assert eng.alloc.in_use == len(eng.prefix)   # only cache refs remain
+
+
+def test_unplaceable_request_rejected_at_submit():
+    """A request that cannot fit the pool even fully recomputed fails at
+    submit() — once queued it would starve the strict head-of-line queue
+    without ever becoming admissible."""
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import PagedServeEngine, Request
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = PagedServeEngine(model, params, slots=1, max_len=64,
+                           block_size=4, num_blocks=2, chunk=4)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(rid=0, prompt=list(range(30)), max_new=10))
+    # a feasible request still serves on the same engine
+    [ok] = eng.run([Request(rid=1, prompt=[1, 2, 3], max_new=4)])
+    assert len(ok.out) == 4

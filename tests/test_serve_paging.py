@@ -1,0 +1,210 @@
+"""Property-style tests for the paged-KV layer: allocator invariants under
+random traces, prefix-cache hit/miss accounting, and pool round-trips."""
+import numpy as np
+import pytest
+
+from repro.serve.paging import (BlockAllocator, BlockAllocatorError, KVPool,
+                                PrefixCache, chain_hashes, pages_for)
+
+
+# ------------------------------------------------------------- allocator
+
+
+def test_alloc_free_roundtrip_under_random_traces():
+    """Random request traces: every page allocated is eventually freed,
+    the free list never leaks or duplicates, refcounts stay balanced."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        alloc = BlockAllocator(num_blocks=int(rng.integers(4, 32)),
+                               block_size=int(rng.integers(1, 9)))
+        held: list[int] = []   # one entry per reference we hold
+        for _ in range(300):
+            op = rng.random()
+            if op < 0.45 and alloc.num_free:
+                held.append(alloc.alloc())
+            elif op < 0.65 and held:
+                bid = held[int(rng.integers(0, len(held)))]
+                alloc.incref(bid)
+                held.append(bid)
+            elif held:
+                alloc.decref(held.pop(int(rng.integers(0, len(held)))))
+            alloc.check()
+            assert alloc.in_use == len(set(held))
+        for bid in held:
+            alloc.decref(bid)
+        alloc.check()
+        assert alloc.in_use == 0
+        assert alloc.num_free == alloc.num_blocks
+        assert alloc.stats.allocs == alloc.stats.frees
+
+
+def test_no_double_free():
+    alloc = BlockAllocator(4, 8)
+    bid = alloc.alloc()
+    alloc.decref(bid)
+    with pytest.raises(BlockAllocatorError):
+        alloc.decref(bid)
+
+
+def test_free_unknown_block_raises():
+    alloc = BlockAllocator(4, 8)
+    with pytest.raises(BlockAllocatorError):
+        alloc.decref(3)
+
+
+def test_incref_unallocated_raises():
+    alloc = BlockAllocator(4, 8)
+    with pytest.raises(BlockAllocatorError):
+        alloc.incref(0)
+
+
+def test_oom_raises_and_counts():
+    alloc = BlockAllocator(2, 8)
+    alloc.alloc(), alloc.alloc()
+    with pytest.raises(BlockAllocatorError):
+        alloc.alloc()
+    assert alloc.stats.oom_events == 1
+
+
+def test_refcounted_sharing_frees_only_at_zero():
+    alloc = BlockAllocator(2, 8)
+    bid = alloc.alloc()
+    alloc.incref(bid)        # second reader
+    alloc.decref(bid)
+    assert alloc.refcount(bid) == 1 and alloc.in_use == 1
+    alloc.decref(bid)
+    assert alloc.in_use == 0
+
+
+# ------------------------------------------------------------ hash chain
+
+
+def test_chain_hashes_prefix_property():
+    """Chains agree exactly up to the first differing block and only full
+    blocks participate."""
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        bs = int(rng.integers(2, 8))
+        a = rng.integers(0, 100, size=int(rng.integers(8, 40))).tolist()
+        b = list(a)
+        flip = int(rng.integers(0, len(b)))
+        b[flip] = (b[flip] + 1) % 100
+        ha, hb = chain_hashes(a, bs), chain_hashes(b, bs)
+        assert ha == chain_hashes(list(a), bs)          # deterministic
+        assert len(ha) == len(a) // bs                  # partial tail excluded
+        agree = flip // bs                              # blocks before flip
+        assert ha[:agree] == hb[:agree]
+        assert ha[agree:] != hb[agree:] or agree == len(ha)
+
+
+# ----------------------------------------------------------- prefix cache
+
+
+def _register(cache: PrefixCache, tokens: list[int]) -> list[int]:
+    """Register every full block of ``tokens``; returns the pages (the
+    caller's references are released, the cache keeps its own)."""
+    bids = []
+    for h in chain_hashes(tokens, cache.allocator.block_size):
+        bid = cache.allocator.alloc()
+        assert cache.insert(h, bid)
+        cache.allocator.decref(bid)   # writer's reference released
+        bids.append(bid)
+    return bids
+
+
+def test_prefix_cache_hit_miss_accounting():
+    alloc = BlockAllocator(16, 4)
+    cache = PrefixCache(alloc)
+    shared = list(range(8))           # two full blocks
+    _register(cache, shared)
+    assert cache.stats.insertions == 2
+
+    # full hit on the shared prefix, miss on the divergent tail
+    n, bids = cache.match(shared + [91, 92, 93, 94, 95])
+    assert n == 8 and len(bids) == 2
+    assert cache.stats.hit_blocks == 2 and cache.stats.miss_blocks == 1
+    assert all(alloc.refcount(b) == 2 for b in bids)    # cache + caller
+
+    # cold lookup: pure miss
+    n2, bids2 = cache.match([50, 51, 52, 53])
+    assert n2 == 0 and not bids2
+    assert cache.stats.miss_blocks == 2
+    assert 0 < cache.stats.hit_rate < 1
+
+    for b in bids:
+        alloc.decref(b)
+    alloc.check()
+
+
+def test_prefix_cache_match_cap_keeps_a_token_to_feed():
+    """max_tokens caps the match so the engine always has >= 1 token whose
+    logits seed decoding."""
+    alloc = BlockAllocator(16, 4)
+    cache = PrefixCache(alloc)
+    prompt = list(range(8))
+    _register(cache, prompt)
+    n, bids = cache.match(prompt, max_tokens=len(prompt) - 1)
+    assert n == 4 and len(bids) == 1   # second block would cover the tail
+    for b in bids:
+        alloc.decref(b)
+
+
+def test_peek_takes_no_references():
+    alloc = BlockAllocator(16, 4)
+    cache = PrefixCache(alloc)
+    prompt = list(range(8))
+    bids = _register(cache, prompt)
+    assert cache.peek(prompt + [99]) == 8
+    assert all(alloc.refcount(b) == 1 for b in bids)
+
+
+def test_eviction_respects_references_and_lru():
+    alloc = BlockAllocator(8, 4)
+    cache = PrefixCache(alloc)
+    old = _register(cache, [1, 2, 3, 4])
+    new = _register(cache, [5, 6, 7, 8])
+    n, held = cache.match([5, 6, 7, 8, 0])    # touch + hold the newer entry
+    assert n == 4
+    assert cache.evictable() == 1             # only the old, unreferenced one
+    assert cache.evict(5) == 1                # reclaims LRU (old), not held
+    assert alloc.refcount(old[0]) == 0
+    assert alloc.refcount(new[0]) == 2
+    for b in held:
+        alloc.decref(b)
+    assert cache.evict(5) == 1                # now reclaimable
+    alloc.check()
+    assert alloc.in_use == 0
+
+
+def test_insert_first_writer_wins():
+    alloc = BlockAllocator(8, 4)
+    cache = PrefixCache(alloc)
+    [h] = chain_hashes([1, 2, 3, 4], 4)
+    a, b = alloc.alloc(), alloc.alloc()
+    assert cache.insert(h, a)
+    assert not cache.insert(h, b)             # loser keeps its private page
+    assert alloc.refcount(a) == 2 and alloc.refcount(b) == 1
+
+
+# ------------------------------------------------------------------ pool
+
+
+def test_kv_pool_roundtrip():
+    rng = np.random.default_rng(2)
+    pool = KVPool(num_blocks=4, block_size=3, layers=2, n_kv=2, head_dim=4,
+                  dtype=np.float32)
+    k = rng.standard_normal((2, 3, 2, 4)).astype(np.float32)
+    v = rng.standard_normal((2, 3, 2, 4)).astype(np.float32)
+    pool.write(2, k, v)
+    k2, v2 = pool.read([2])
+    np.testing.assert_array_equal(k2, k)
+    np.testing.assert_array_equal(v2, v)
+    kk, _ = pool.read([2, 2])
+    assert kk.shape == (2, 6, 2, 4)
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
