@@ -1,0 +1,222 @@
+"""Audit-pathway benchmark: the detector must catch what the oracle can't.
+
+``compare_engines`` proves two serving pathways emit identical greedy
+token streams — it is blind to *how* they got there.  This benchmark
+seeds three misconfigurations that keep outputs token-identical while
+degrading the pathway (the paper's "suboptimal transport pathway" class,
+§8), and asserts the audit pipeline flags each as an error:
+
+  1. forced contiguous fallback on a dense arch (full-batch per-token
+     prefill instead of paged chunked prefill);
+  2. shrunk page size (per-page overhead up, prefix granularity down);
+  3. disabled prefix cache (every admission recomputes the shared
+     prefix).
+
+A detector miss — a seeded run the registry does NOT flag — is itself an
+``error`` finding, so CI gates on the audit pipeline's sensitivity, not
+just on the healthy run being clean.  The healthy run's deterministic
+counters (decode steps, cached tokens, hit rate) and throughput go into
+the persisted ``BENCH_*.json`` ledger with regression thresholds.
+
+    PYTHONPATH=src python benchmarks/audit_pathways.py [--smoke]
+        [--ledger-dir DIR] [--update-baseline]
+
+Prints one JSON object on the last line; ``findings`` carries the
+diagnostics records scripts/smoke_all.py folds into the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+
+try:  # run as a module (benchmarks.run) or as a script
+    from benchmarks.serve_throughput import (PAGED_COUNTER_SPECS,
+                                             _trace_factory,
+                                             paged_counter_metrics)
+except ImportError:  # pragma: no cover - script path
+    from serve_throughput import (PAGED_COUNTER_SPECS, _trace_factory,
+                                  paged_counter_metrics)
+
+#: What each seeded misconfiguration must trip in the registry.
+SEEDS = {
+    "contiguous-fallback": "pathway-engine-selection",
+    "shrunk-page-size": "pathway-page-geometry",
+    "disabled-prefix-cache": "pathway-prefix-cache",
+}
+
+
+def _ctx(cfg, shared_prefix=True):
+    from repro.audit import AuditContext
+
+    return AuditContext(workload="bench:audit_pathways", family=cfg.family,
+                        arch=cfg.name, shared_prefix=shared_prefix)
+
+
+def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
+          ledger_dir: str | None = None,
+          update_baseline: bool = False) -> dict:
+    from repro.audit import Ledger, MetricSpec, RunAudit
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import (PagedServeEngine, ServeEngine,
+                                    compare_engines, token_matrix)
+
+    if smoke:
+        n_req, shared, tails, max_new = 6, 16, (3, 6), 4
+        slots, max_len, block, chunk = 2, 48, 8, 4
+    else:
+        n_req, shared, tails, max_new = 12, 32, (4, 10), 8
+        slots, max_len, block, chunk = 4, 96, 8, 8
+
+    cfg = reduced(ALL_ARCHS[arch])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    make = _trace_factory(cfg.vocab_size, n_requests=n_req,
+                          shared_len=shared, tail_lo=tails[0],
+                          tail_hi=tails[1], max_new=max_new, seed=seed)
+    findings: list[dict] = []
+
+    # ------------------------------------------------ oracle stays green
+    verify = compare_engines(model, params, make, slots=slots,
+                             max_len=max_len, block_size=block, chunk=chunk)
+    for v in verify.verdicts:
+        if not v.ok:
+            findings.append({"severity": "error",
+                             "kind": f"serve-oracle-{v.kind}",
+                             "detail": v.detail})
+
+    # --------------------------------------------------- healthy pathway
+    audit = RunAudit(_ctx(cfg))
+    eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                           block_size=block, chunk=chunk,
+                           tracer=audit.tracer)
+    t0 = time.perf_counter()
+    done = eng.run(make())
+    wall = time.perf_counter() - t0
+    healthy_tokens = token_matrix(done, n_req, max_new)
+    rep = eng.report()
+    healthy = audit.evaluate(engine_report=rep)
+    findings.extend(healthy)        # a dirty healthy run is a real failure
+
+    # ------------------------------------------- seeded misconfigurations
+    def contiguous_fallback(tracer):
+        return ServeEngine(model, params, slots=slots, max_len=max_len,
+                           tracer=tracer)
+
+    def shrunk_page(tracer):
+        return PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=2, chunk=chunk, tracer=tracer)
+
+    def no_prefix_cache(tracer):
+        return PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=block, chunk=chunk,
+                                use_prefix_cache=False, tracer=tracer)
+
+    builders = {"contiguous-fallback": contiguous_fallback,
+                "shrunk-page-size": shrunk_page,
+                "disabled-prefix-cache": no_prefix_cache}
+    detections = {}
+    for name, build_eng in builders.items():
+        s_audit = RunAudit(_ctx(cfg))
+        s_eng = build_eng(s_audit.tracer)
+        s_done = s_eng.run(make())
+        s_findings = s_audit.evaluate(engine_report=s_eng.report())
+        hit = [f for f in s_findings
+               if f["kind"] == SEEDS[name] and f["severity"] == "error"]
+        token_identical = bool(
+            (token_matrix(s_done, n_req, max_new) == healthy_tokens).all())
+        detections[name] = {
+            "detected": bool(hit),
+            "expected_kind": SEEDS[name],
+            "findings": s_findings,
+            "token_identical": token_identical,
+        }
+        if not hit:
+            findings.append({
+                "severity": "error", "kind": "audit-detector-miss",
+                "detail": f"seeded misconfiguration {name!r} was not "
+                          f"flagged as {SEEDS[name]} "
+                          f"(got {[f['kind'] for f in s_findings]})"})
+        if not token_identical:
+            findings.append({
+                "severity": "error", "kind": "audit-seed-divergence",
+                "detail": f"seeded misconfiguration {name!r} changed the "
+                          f"token stream — it must degrade the pathway, "
+                          f"not the answer"})
+
+    # --------------------------------- perf ledger (opt-in, like every
+    # serving benchmark: only a caller that names a ledger dir gates on
+    # baselines, so bare benchmark runs never write repo-root state)
+    metrics = {
+        **paged_counter_metrics(rep),
+        "tokens_per_s": round(rep["tokens_out"] / max(wall, 1e-9), 1),
+    }
+    ledger_out = None
+    if ledger_dir is not None:
+        ledger = Ledger(ledger_dir)
+        # shared deterministic counter bands + this benchmark's
+        # wall-clock throughput (tracked, not gated: CPU CI noise)
+        specs = (PAGED_COUNTER_SPECS
+                 + [MetricSpec("tokens_per_s", gate=False)])
+        # smoke and full traces have different shapes: separate baselines
+        bench_key = f"audit_pathways_{'smoke' if smoke else 'full'}"
+        ledger_res = ledger.compare(bench_key, metrics, specs,
+                                    update_baseline=update_baseline)
+        findings.extend(ledger_res.findings)
+        ledger_out = {"baseline_written": ledger_res.baseline_written,
+                      "deltas": ledger_res.deltas,
+                      "path": str(ledger.path(bench_key))}
+
+    return {
+        "bench": "audit_pathways",
+        "arch": cfg.name,
+        "mode": "smoke" if smoke else "full",
+        "oracle_ok": verify.ok,
+        "healthy_findings": healthy,
+        "detections": detections,
+        "detected_all": all(d["detected"] for d in detections.values()),
+        "trace": audit.tracer.summary(),
+        "metrics": metrics,
+        "ledger": ledger_out,
+        "findings": findings,
+    }
+
+
+def run():
+    """benchmarks.run CSV protocol."""
+    res = bench(smoke=True)
+    n_err = sum(1 for f in res["findings"] if f["severity"] == "error")
+    if n_err:
+        raise RuntimeError(f"audit_pathways: {n_err} error finding(s): "
+                           + "; ".join(f["detail"] for f in res["findings"]
+                                       if f["severity"] == "error"))
+    yield {"name": "audit_pathways.detectors",
+           "us_per_call": 0.0,
+           "derived": (f"detected_all={res['detected_all']} "
+                       f"oracle_ok={res['oracle_ok']}")}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger-dir", default=None,
+                    help="BENCH_*.json directory; omit to skip the ledger")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(bench(args.arch, smoke=args.smoke, seed=args.seed,
+                           ledger_dir=args.ledger_dir,
+                           update_baseline=args.update_baseline)))
+
+
+if __name__ == "__main__":
+    main()

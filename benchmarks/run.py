@@ -18,6 +18,7 @@ SUITES = [
     ("ring_accel", "benchmarks.ring_accel"),      # Figs 10/11
     ("ring_podscale", "benchmarks.ring_podscale"),  # Figs 6/7 at paper scale (dry-run)
     ("serve_throughput", "benchmarks.serve_throughput"),  # paged serving
+    ("audit_pathways", "benchmarks.audit_pathways"),  # runtime audit gate
 ]
 
 
@@ -25,8 +26,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered suite (the default; spelled "
+                         "out so CI invocations are explicit)")
     args = ap.parse_args()
+    if args.all and args.only:
+        ap.error("--all and --only are mutually exclusive")
     only = set(args.only.split(",")) if args.only else None
+    known = {name for name, _ in SUITES}
+    if only and not only <= known:
+        ap.error(f"unknown suite(s): {sorted(only - known)}; "
+                 f"registered: {sorted(known)}")
 
     print("name,us_per_call,derived")
     failures = 0

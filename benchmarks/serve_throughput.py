@@ -28,7 +28,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.audit import MetricSpec  # noqa: E402
+
 SPEEDUP_FLOOR = 1.3
+
+#: Deterministic pathway counters from ``PagedServeEngine.report()`` —
+#: shared by every serving benchmark's ledger so the gates cannot drift
+#: apart.  These only move when the code path itself changes, hence the
+#: tight bands; wall-clock metrics are each benchmark's own, ungated.
+PAGED_COUNTER_SPECS = [
+    MetricSpec("decode_steps", higher_is_better=False, rel_tol=0.05),
+    MetricSpec("cached_tokens", higher_is_better=True, rel_tol=0.05),
+    MetricSpec("prefix_hit_rate", higher_is_better=True, rel_tol=0.05),
+    MetricSpec("tokens_out", higher_is_better=True, rel_tol=0.0),
+]
+
+
+def paged_counter_metrics(rep: dict) -> dict:
+    """The ledger metrics matching ``PAGED_COUNTER_SPECS``."""
+    return {
+        "decode_steps": float(rep["decode_steps"]),
+        "cached_tokens": float(rep["cached_tokens"]),
+        "prefix_hit_rate": float(rep["prefix_hit_rate"]),
+        "tokens_out": float(rep["tokens_out"]),
+    }
 
 
 def _trace_factory(vocab: int, *, n_requests: int, shared_len: int,
@@ -59,7 +82,9 @@ def _timed_run(eng, reqs, arrivals=None) -> tuple[float, int]:
 
 
 def bench(arch: str = "deepseek-7b", *, smoke: bool = False,
-          seed: int = 0) -> dict:
+          seed: int = 0, ledger_dir: str | None = None,
+          update_baseline: bool = False) -> dict:
+    from repro.audit import AuditContext, Ledger, RunAudit
     from repro.configs import ALL_ARCHS, reduced
     from repro.models import build
     from repro.serve.engine import (PagedServeEngine, ServeEngine,
@@ -101,10 +126,18 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False,
     contig.run(warm())
     contig_wall, contig_tokens = _timed_run(contig, make())
 
+    audit = RunAudit(AuditContext(workload="bench:serve_throughput",
+                                  family=cfg.family, arch=cfg.name,
+                                  shared_prefix=True))
     paged = PagedServeEngine(model, params, slots=slots, max_len=max_len,
-                             block_size=block, chunk=chunk)
+                             block_size=block, chunk=chunk,
+                             tracer=audit.tracer)
     paged.run(warm())   # also primes the prefix cache: steady-state serving
     paged_wall, paged_tokens = _timed_run(paged, make())
+
+    # pathway expectations over the measured run's trace + report: the
+    # oracle above proves the answer, this proves the route taken
+    findings.extend(audit.evaluate(engine_report=paged.report()))
 
     contig_tps = contig_tokens / max(contig_wall, 1e-9)
     paged_tps = paged_tokens / max(paged_wall, 1e-9)
@@ -140,10 +173,30 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False,
             "page_peak_utilization": rep["page_peak_utilization"],
         })
 
+    # ---- persisted perf ledger (opt-in via --ledger-dir): deterministic
+    # pathway counters carry tight bands; wall-clock throughput is
+    # recorded ungated so the trajectory is tracked without CI noise
+    ledger_out = None
+    if ledger_dir is not None:
+        bench_key = f"serve_throughput_{'smoke' if smoke else 'full'}"
+        res = Ledger(ledger_dir).compare(
+            bench_key,
+            {**paged_counter_metrics(paged.report()),
+             "paged_tokens_per_s": round(paged_tps, 1),
+             "speedup": round(speedup, 2)},
+            PAGED_COUNTER_SPECS
+            + [MetricSpec("paged_tokens_per_s", gate=False),
+               MetricSpec("speedup", gate=False)],
+            update_baseline=update_baseline)
+        findings.extend(res.findings)
+        ledger_out = {"baseline_written": res.baseline_written,
+                      "deltas": res.deltas}
+
     return {
         "bench": "serve_throughput",
         "arch": cfg.name,
         "mode": "smoke" if smoke else "full",
+        "ledger": ledger_out,
         "trace": {"requests": n_req, "shared_prefix": shared,
                   "max_new": max_new, "slots": slots, "chunk": chunk,
                   "block_size": block},
@@ -173,9 +226,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace sized for a ~2s measured run")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger-dir", default=None,
+                    help="BENCH_*.json directory; omit to skip the ledger")
+    ap.add_argument("--update-baseline", action="store_true")
     args = ap.parse_args()
     # one JSON object on the last line (the repo's benchmark convention)
-    print(json.dumps(bench(args.arch, smoke=args.smoke, seed=args.seed)))
+    print(json.dumps(bench(args.arch, smoke=args.smoke, seed=args.seed,
+                           ledger_dir=args.ledger_dir,
+                           update_baseline=args.update_baseline)))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,16 @@
 """Dev harness: tiny forward/train/prefill/decode for every family on CPU,
-plus the serving-throughput smoke gated on its diagnostics findings."""
+plus the serving-throughput and audit-pathway smokes gated on their
+diagnostics findings.
+
+    PYTHONPATH=src python scripts/smoke_all.py [archs...] [--json]
+        [--ledger-dir DIR] [--update-baseline]
+
+``--json`` prints one machine-readable report (per-arch results, all
+findings, ledger deltas) on stdout's last line; the exit code is driven
+by ``Diagnostics.gate()`` either way — the paper's performance-verified
+bar, where an error finding fails the harness.
+"""
+import argparse
 import json
 import os
 import subprocess
@@ -8,16 +19,18 @@ import sys
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ALL_ARCHS, SHAPES, reduced, ShapeConfig
+from repro.configs import ALL_ARCHS, ShapeConfig, reduced
+from repro.configs.base import RunConfig, TrainConfig
+from repro.core.diagnostics import Diagnostics
 from repro.models import build
 from repro.train.step import init_train_state, make_train_step
-from repro.configs.base import RunConfig, TrainConfig
 
-names = sys.argv[1:] or list(ALL_ARCHS)
-shape = ShapeConfig("smoke", "train", 32, 2)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-for name in names:
+
+def smoke_arch(name: str) -> dict:
     cfg = reduced(ALL_ARCHS[name])
+    shape = ShapeConfig("smoke", "train", 32, 2)
     model = build(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init_params(key)
@@ -35,7 +48,8 @@ for name in names:
 
     # prefill + decode
     pb = model.sample_batch(ShapeConfig("smoke", "prefill", 32, 2), key)
-    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, cache_len=32))(params, pb)
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=32))(params, pb)
     assert logits.shape == (2, cfg.padded_vocab), (name, logits.shape)
     cache2 = model.zero_cache(2, 32)
     # sizes line up?
@@ -47,25 +61,83 @@ for name in names:
     dl, cache3 = jax.jit(model.decode_step)(params, cache, tok, pos)
     assert dl.shape == (2, cfg.padded_vocab)
     assert jnp.all(jnp.isfinite(dl)), name
-    print(f"OK {name:24s} params={n:>10,} loss={float(loss):.3f} "
-          f"step_loss={float(m['loss']):.3f}")
+    return {"arch": name, "params": int(n), "loss": float(loss),
+            "step_loss": float(m["loss"])}
 
-# serve throughput smoke: paged-vs-contiguous oracle + speedup, folded
-# into the diagnostics gate (the paper's performance-verified-image bar:
-# an error finding fails the harness)
-from repro.core.diagnostics import Diagnostics  # noqa: E402
 
-repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-out = subprocess.run(
-    [sys.executable, os.path.join(repo, "benchmarks", "serve_throughput.py"),
-     "--smoke"], capture_output=True, text=True, cwd=repo)
-assert out.returncode == 0, out.stderr[-2000:]
-rec = json.loads(out.stdout.strip().splitlines()[-1])
-diag = Diagnostics()
-diag.extend(rec["findings"], source="serve_throughput")
-print(diag.render())
-assert diag.gate(), "serve throughput diagnostics gate failed"
-print(f"OK serve_throughput        speedup={rec['speedup']}x "
-      f"oracle_ok={rec['oracle_ok']} "
-      f"hit_rate={rec['paged']['prefix_hit_rate']}")
-print("ALL OK")
+def run_bench(script: str, extra: list[str]) -> dict:
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", script),
+         "--smoke"] + extra,
+        capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, (script, out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("archs", nargs="*", default=None)
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on the last stdout line")
+    ap.add_argument("--ledger-dir", default=REPO,
+                    help="BENCH_*.json directory for the perf ledger")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+    names = args.archs or list(ALL_ARCHS)
+    quiet = args.as_json
+
+    archs = []
+    for name in names:
+        rec = smoke_arch(name)
+        archs.append(rec)
+        if not quiet:
+            print(f"OK {name:24s} params={rec['params']:>10,} "
+                  f"loss={rec['loss']:.3f} step_loss={rec['step_loss']:.3f}")
+
+    # serving + audit smokes: findings fold into the one diagnostics gate
+    diag = Diagnostics()
+    ledger_flags = ["--ledger-dir", args.ledger_dir] + (
+        ["--update-baseline"] if args.update_baseline else [])
+
+    serve_rec = run_bench("serve_throughput.py", ledger_flags)
+    diag.extend(serve_rec["findings"], source="serve_throughput")
+
+    audit_rec = run_bench("audit_pathways.py", ledger_flags)
+    diag.extend(audit_rec["findings"], source="audit_pathways")
+
+    ledger_deltas = {
+        "serve_throughput": serve_rec.get("ledger"),
+        "audit_pathways": audit_rec.get("ledger"),
+    }
+    ok = diag.gate()
+
+    if quiet:
+        print(json.dumps({
+            "ok": ok,
+            "worst": diag.worst,
+            "archs": archs,
+            "serve_throughput": {
+                k: serve_rec[k] for k in
+                ("speedup", "oracle_ok", "contiguous_tokens_per_s",
+                 "paged_tokens_per_s")},
+            "audit_pathways": {
+                "oracle_ok": audit_rec["oracle_ok"],
+                "detected_all": audit_rec["detected_all"],
+                "metrics": audit_rec["metrics"]},
+            "findings": diag.findings,
+            "ledger": ledger_deltas,
+        }))
+    else:
+        print(diag.render())
+        print(f"OK serve_throughput        speedup={serve_rec['speedup']}x "
+              f"oracle_ok={serve_rec['oracle_ok']} "
+              f"hit_rate={serve_rec['paged']['prefix_hit_rate']}")
+        print(f"OK audit_pathways          "
+              f"detected_all={audit_rec['detected_all']} "
+              f"oracle_ok={audit_rec['oracle_ok']}")
+        print("ALL OK" if ok else "GATE FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Runtime audit pipeline: trace what the hot paths *did*, check it
+against what they *should have done* on this (arch, mesh, workload), and
+track performance across PRs.
+
+The paper's outlook (§8) asks for automated debug-log parsing that
+detects suboptimal transport pathways without user intervention.  The
+inspector already does that for compiled HLO; this package extends the
+idea to runtime behaviour:
+
+  trace        — low-overhead structured event tracer (ring buffer +
+                 scoped spans) the serving engines, scheduler, decode
+                 step, and launchers emit into
+  expectations — declarative pathway-expectation registry mapping
+                 (arch family, mesh shape, workload) → expected
+                 signatures; mismatches become diagnostics findings
+  ledger       — persisted per-benchmark perf ledger (``BENCH_*.json``)
+                 with baseline load/compare/update semantics and
+                 regression thresholds
+  report       — folds traces + expectation mismatches + ledger
+                 regressions into ``core.diagnostics.Diagnostics`` so
+                 CI gates on them
+"""
+from repro.audit.expectations import (DEFAULT_REGISTRY, AuditContext,
+                                      Evidence, ExpectationRegistry,
+                                      ExpectedSignature, Rule)
+from repro.audit.ledger import Ledger, LedgerResult, MetricSpec
+from repro.audit.report import RunAudit
+from repro.audit.trace import NULL_TRACER, TraceEvent, Tracer
+
+__all__ = [
+    "AuditContext", "DEFAULT_REGISTRY", "Evidence", "ExpectationRegistry",
+    "ExpectedSignature", "Ledger", "LedgerResult", "MetricSpec",
+    "NULL_TRACER", "Rule", "RunAudit", "TraceEvent", "Tracer",
+]

@@ -1,0 +1,286 @@
+"""Declarative pathway-expectation registry.
+
+The dual-environment verdict (``core.verify``) proves two pathways give
+the same *answer*; it cannot see that one of them took a degraded route —
+a dense arch silently falling back to the contiguous engine, a shrunken
+page size, a disabled prefix cache, or a hot loop recompiling every tick
+all produce token-identical output.  This registry encodes what the hot
+path *should* look like for a given (arch family, mesh shape, workload)
+and turns runtime evidence (trace events, engine reports,
+``inspector.TransportReport``) into diagnostics findings in the existing
+severity vocabulary, exactly the paper's "detect suboptimal transport
+pathways from debug output" loop (§8) applied to our own runtime.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.audit.trace import Tracer
+from repro.core.inspector import COLLECTIVES, TransportReport
+
+
+@dataclass(frozen=True)
+class AuditContext:
+    """What ran: the registry key. ``mesh`` is the device-mesh shape (a
+    single-process serving run is ``(1,)``); ``shared_prefix`` declares
+    that prompts overlap by at least one cache page, so a working prefix
+    cache is an expectation rather than an optimisation — callers must
+    leave it False when the common prefix is shorter than the engine's
+    block size (sub-block prefixes cannot hit, only full blocks
+    register)."""
+
+    workload: str                      # "serve" | "train" | "bench:<name>"
+    family: str                        # dense | moe | ssm | hybrid | vlm | encdec
+    arch: str = "?"
+    mesh: tuple[int, ...] = (1,)
+    shared_prefix: bool = False
+
+    @property
+    def n_devices(self) -> int:
+        return int(math.prod(self.mesh))
+
+
+@dataclass
+class Evidence:
+    """What we observed.  Any subset may be present; checks that lack
+    their evidence are skipped (absence of evidence is not a finding)."""
+
+    tracer: Tracer | None = None
+    engine_report: dict | None = None      # ServeEngine/PagedServeEngine.report()
+    transport: TransportReport | None = None
+
+    # ------------------------------------------------- derived accessors
+    def engine_kind(self) -> str | None:
+        if self.tracer is not None:
+            ev = self.tracer.last("engine-init")
+            if ev is not None:
+                return ev.data.get("engine")
+        if self.engine_report:
+            return self.engine_report.get("engine")
+        return None
+
+    def engine_init(self) -> dict | None:
+        if self.tracer is not None:
+            ev = self.tracer.last("engine-init")
+            if ev is not None:
+                return ev.data
+        return self.engine_report
+
+    def compile_counts(self) -> dict[str, int]:
+        """Per-jitted-function compile (cache-miss) counts.
+
+        Trace events give the per-fn breakdown but live in a bounded
+        ring; the engine report's ``compiles`` field is the watcher's
+        exact lifetime counter, so it wins when larger (a long run whose
+        early compile events were evicted still judges correctly)."""
+        counts: dict[str, int] = {}
+        if self.tracer is not None:
+            for ev in self.tracer.events("compile"):
+                fn = ev.data.get("fn", "?")
+                counts[fn] = counts.get(fn, 0) + 1
+        rep = self.engine_report or {}
+        if isinstance(rep.get("compiles"), int):
+            fn = ("decode_chunk" if rep.get("engine") == "paged"
+                  else "decode_step")
+            counts[fn] = max(counts.get(fn, 0), rep["compiles"])
+        return counts
+
+
+@dataclass
+class ExpectedSignature:
+    """The declarative half of a rule: what the evidence must show.
+    ``None`` fields are unchecked."""
+
+    engine: str | None = None               # "paged" | "contiguous"
+    min_block_size: int | None = None       # page geometry floor
+    min_prefix_hit_rate: float | None = None  # gated on ctx.shared_prefix
+    max_compiles_per_fn: int | None = None  # steady state: 1 per program
+    allowed_collectives: frozenset[str] | None = None
+    max_collective_group: int | None = None  # default: ctx.n_devices
+    forbid_host_transfer: bool = False
+
+
+@dataclass
+class Rule:
+    """Registry entry: match predicate (families × workloads × mesh) plus
+    the expected signature.  ``families``/``workloads`` of ``None`` match
+    anything; mesh bounds are on total device count."""
+
+    name: str
+    expect: ExpectedSignature
+    families: tuple[str, ...] | None = None
+    workloads: tuple[str, ...] | None = None
+    min_devices: int = 1
+    max_devices: int | None = None
+    severity: str = "error"
+
+    def applies(self, ctx: AuditContext) -> bool:
+        if self.families is not None and ctx.family not in self.families:
+            return False
+        if self.workloads is not None:
+            base = ctx.workload.split(":", 1)[0]
+            if ctx.workload not in self.workloads and base not in self.workloads:
+                return False
+        n = ctx.n_devices
+        if n < self.min_devices:
+            return False
+        if self.max_devices is not None and n > self.max_devices:
+            return False
+        return True
+
+
+class ExpectationRegistry:
+    def __init__(self, rules: Sequence[Rule] = ()):
+        self.rules: list[Rule] = list(rules)
+
+    def register(self, rule: Rule) -> Rule:
+        self.rules.append(rule)
+        return rule
+
+    def match(self, ctx: AuditContext) -> list[Rule]:
+        return [r for r in self.rules if r.applies(ctx)]
+
+    # ----------------------------------------------------------- evaluate
+    def evaluate(self, ctx: AuditContext, ev: Evidence) -> list[dict]:
+        findings: list[dict] = []
+        for rule in self.match(ctx):
+            findings.extend(_check_rule(rule, ctx, ev))
+        return findings
+
+
+def _find(rule: Rule, kind: str, detail: str) -> dict:
+    return {"severity": rule.severity, "kind": kind,
+            "detail": f"[{rule.name}] {detail}"}
+
+
+def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
+    out: list[dict] = []
+    sig = rule.expect
+
+    if sig.engine is not None:
+        got = ev.engine_kind()
+        if got is not None and got != sig.engine:
+            out.append(_find(
+                rule, "pathway-engine-selection",
+                f"{ctx.family}/{ctx.workload} served by {got!r} engine; "
+                f"expected {sig.engine!r} (token-identical output but a "
+                f"degraded transport pathway)"))
+
+    init = ev.engine_init()
+    if sig.min_block_size is not None and init is not None:
+        bs = init.get("block_size")
+        if bs is not None and bs < sig.min_block_size:
+            out.append(_find(
+                rule, "pathway-page-geometry",
+                f"page size {bs} below floor {sig.min_block_size}: per-page "
+                f"overhead dominates and prefix sharing granularity degrades"))
+
+    if (sig.min_prefix_hit_rate is not None and ctx.shared_prefix
+            and init is not None):
+        if init.get("prefix_cache") is False:
+            out.append(_find(
+                rule, "pathway-prefix-cache",
+                "prefix cache disabled on a shared-prefix workload: every "
+                "admission recomputes the common prefix"))
+        else:
+            hr = (ev.engine_report or {}).get("prefix_hit_rate")
+            if hr is not None and hr < sig.min_prefix_hit_rate:
+                out.append(_find(
+                    rule, "pathway-prefix-cache",
+                    f"prefix hit rate {hr:.3f} below "
+                    f"{sig.min_prefix_hit_rate:.3f} on a shared-prefix "
+                    f"workload: cache ineffective (mis-sized pages or "
+                    f"broken registration)"))
+
+    if sig.max_compiles_per_fn is not None:
+        for fn, n in ev.compile_counts().items():
+            if n > sig.max_compiles_per_fn:
+                out.append(_find(
+                    rule, "pathway-recompilation",
+                    f"{fn} compiled {n}× (> {sig.max_compiles_per_fn}): "
+                    f"shape polymorphism leaked into the hot loop"))
+
+    if ev.transport is not None:
+        if sig.allowed_collectives is not None:
+            bad = set(ev.transport.counts()) - set(sig.allowed_collectives)
+            if bad:
+                out.append(_find(
+                    rule, "pathway-collective-kind",
+                    f"unexpected collective kind(s) {sorted(bad)}; expected "
+                    f"subset of {sorted(sig.allowed_collectives)}"))
+        max_group = sig.max_collective_group
+        if max_group is None and (sig.allowed_collectives is not None
+                                  or sig.forbid_host_transfer):
+            max_group = ctx.n_devices
+        if max_group is not None:
+            for op in ev.transport.ops:
+                if op.group_size > max_group:
+                    out.append(_find(
+                        rule, "pathway-collective-group",
+                        f"{op.name}: {op.kind} over group of "
+                        f"{op.group_size} > mesh bound {max_group}"))
+                    break
+        if sig.forbid_host_transfer:
+            for f in ev.transport.findings:
+                if f.get("kind") == "host-transfer":
+                    out.append(_find(
+                        rule, "pathway-host-transfer",
+                        "host transfer (infeed/outfeed/send/recv) on the "
+                        "hot path: " + f.get("detail", "")))
+                    break
+    return out
+
+
+# ===================================================== default expectations
+
+#: Serving on attention-cache families must take the paged path with sane
+#: page geometry, an effective prefix cache on shared-prefix traces, and
+#: exactly one compile per jitted program (fixed shapes).
+_SERVE_PAGED = Rule(
+    name="serve-dense-paged",
+    families=("dense", "moe"),
+    workloads=("serve", "bench"),
+    expect=ExpectedSignature(
+        engine="paged",
+        min_block_size=4,
+        min_prefix_hit_rate=0.05,
+        max_compiles_per_fn=1,
+    ),
+)
+
+#: Stateful-cache families have no chunked path yet: contiguous is the
+#: *correct* pathway for them (flagging paged here catches the inverse
+#: misconfiguration once a paged path exists for ssm/hybrid).
+_SERVE_STATEFUL = Rule(
+    name="serve-stateful-contiguous",
+    families=("ssm", "hybrid", "vlm", "encdec"),
+    workloads=("serve", "bench"),
+    expect=ExpectedSignature(engine="contiguous", max_compiles_per_fn=1),
+)
+
+#: Training hot paths: collective group sizes bounded by the mesh, no
+#: host transfers inside the compiled step.
+_TRAIN_TRANSPORT = Rule(
+    name="train-transport",
+    workloads=("train",),
+    expect=ExpectedSignature(forbid_host_transfer=True),
+)
+
+#: all-to-all is expert dispatch: a non-moe train step emitting one took
+#: a wrong partitioning pathway (e.g. a resharding the rule set should
+#: have expressed as gather/scatter).
+_TRAIN_NO_DISPATCH = Rule(
+    name="train-no-expert-dispatch",
+    families=tuple(f for f in ("dense", "ssm", "hybrid", "vlm", "encdec")),
+    workloads=("train",),
+    expect=ExpectedSignature(
+        allowed_collectives=frozenset(
+            k for k in COLLECTIVES
+            if k not in ("all-to-all", "ragged-all-to-all")),
+    ),
+)
+
+DEFAULT_REGISTRY = ExpectationRegistry(
+    [_SERVE_PAGED, _SERVE_STATEFUL, _TRAIN_TRANSPORT, _TRAIN_NO_DISPATCH])

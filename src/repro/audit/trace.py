@@ -1,0 +1,121 @@
+"""Structured runtime event tracer: bounded ring buffer + scoped spans.
+
+Hot paths (engine ticks, scheduler decisions, jitted-step dispatch) emit
+small dict-payload events; the buffer is a fixed-capacity ring so a
+long-running server pays O(1) per event and bounded memory, while
+per-kind counters survive ring overflow so expectation checks see exact
+totals even when old events have been dropped.
+
+``NULL_TRACER`` is a shared do-nothing instance: instrumented code holds
+an unconditional ``tracer.emit(...)`` call and the disabled path costs
+one attribute lookup + empty call — no ``if tracer:`` branches sprinkled
+through engines.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter, deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+
+@dataclass
+class TraceEvent:
+    seq: int                      # monotonic per-tracer event index
+    t: float                      # tracer clock at emission
+    kind: str
+    data: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"seq": self.seq, "t": self.t, "kind": self.kind, **self.data}
+
+
+class Tracer:
+    """Bounded event recorder with exact per-kind counts.
+
+    ``clock`` is injectable (engines pass their synthetic tick clock) so
+    traces replay deterministically in tests; default is wall time.
+    """
+
+    enabled = True
+
+    def __init__(self, capacity: int = 4096,
+                 clock: Callable[[], float] | None = None):
+        self.capacity = capacity
+        self.clock = clock or time.perf_counter
+        self._ring: deque[TraceEvent] = deque(maxlen=capacity)
+        self._counts: Counter[str] = Counter()
+        self._seq = 0
+
+    # ------------------------------------------------------------- record
+    def emit(self, kind: str, /, **data: Any) -> None:
+        # kind is positional-only so a payload may carry its own "kind"
+        self._ring.append(TraceEvent(self._seq, self.clock(), kind, data))
+        self._counts[kind] += 1
+        self._seq += 1
+
+    @contextmanager
+    def span(self, kind: str, /, **data: Any) -> Iterator[dict]:
+        """Scoped span: emits ``kind`` once on exit with ``dt_s`` measured
+        wall-clock duration.  The yielded dict lets the body attach
+        results (e.g. a loss value) to the closing event; body keys
+        override span kwargs on collision, and ``dt_s`` always wins."""
+        t0 = time.perf_counter()
+        extra: dict = {}
+        try:
+            yield extra
+        finally:
+            self.emit(kind, **{**data, **extra,
+                               "dt_s": time.perf_counter() - t0})
+
+    # -------------------------------------------------------------- query
+    def events(self, kind: str | None = None) -> list[TraceEvent]:
+        if kind is None:
+            return list(self._ring)
+        return [e for e in self._ring if e.kind == kind]
+
+    def last(self, kind: str) -> TraceEvent | None:
+        for e in reversed(self._ring):
+            if e.kind == kind:
+                return e
+        return None
+
+    def count(self, kind: str) -> int:
+        """Exact lifetime count for ``kind`` (survives ring overflow)."""
+        return self._counts[kind]
+
+    @property
+    def emitted(self) -> int:
+        return self._seq
+
+    @property
+    def dropped(self) -> int:
+        return self._seq - len(self._ring)
+
+    def summary(self) -> dict:
+        return {
+            "emitted": self.emitted,
+            "retained": len(self._ring),
+            "dropped": self.dropped,
+            "counts": dict(self._counts),
+        }
+
+
+class _NullTracer(Tracer):
+    """Do-nothing tracer: instrumentation points call it unconditionally."""
+
+    enabled = False
+
+    def __init__(self):
+        super().__init__(capacity=1)
+
+    def emit(self, kind: str, /, **data: Any) -> None:  # noqa: ARG002
+        pass
+
+    @contextmanager
+    def span(self, kind: str, /, **data: Any) -> Iterator[dict]:  # noqa: ARG002
+        yield {}
+
+
+NULL_TRACER = _NullTracer()

@@ -18,6 +18,7 @@ import time
 import jax
 import numpy as np
 
+from repro.audit import AuditContext, RunAudit
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
@@ -27,18 +28,29 @@ from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           max_len: int = 96, max_new: int = 16, seed: int = 0,
           engine: str = "paged", block_size: int = 8,
-          chunk: int = 4, shared_prefix: int = 0) -> dict:
+          chunk: int = 4, shared_prefix: int = 0,
+          use_prefix_cache: bool = True, audit: bool = True) -> dict:
     cfg = reduced(resolve_arch(arch))
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
 
     if engine == "paged" and cfg.family not in ("dense", "moe"):
         engine = "contiguous"   # no chunked path for stateful caches yet
+    # a shared prefix shorter than one page cannot produce cache hits
+    # (only full blocks register), so only declare the workload
+    # shared-prefix when a hit is actually possible
+    run_audit = RunAudit(AuditContext(
+        workload="serve", family=cfg.family, arch=cfg.name,
+        shared_prefix=shared_prefix >= block_size)) if audit else None
+    tracer = run_audit.tracer if run_audit else None
     if engine == "paged":
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
-                               block_size=block_size, chunk=chunk)
+                               block_size=block_size, chunk=chunk,
+                               use_prefix_cache=use_prefix_cache,
+                               tracer=tracer)
     else:
-        eng = ServeEngine(model, params, slots=slots, max_len=max_len)
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                          tracer=tracer)
 
     rng = np.random.default_rng(seed)
     prefix = rng.integers(0, cfg.vocab_size, size=shared_prefix).tolist()
@@ -70,6 +82,14 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         out.update({k: rep[k] for k in
                     ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
                      "page_peak_utilization", "preemptions")})
+    if run_audit is not None:
+        diag = run_audit.finish(engine_report=eng.report(), source="serve")
+        out["audit"] = {
+            "findings": diag.findings,
+            "worst": diag.worst,
+            "gate_ok": diag.gate(),
+            "trace": run_audit.tracer.summary()["counts"],
+        }
     return out
 
 
@@ -86,12 +106,22 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=4)
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="length of a prompt prefix shared by all requests")
+    ap.add_argument("--no-prefix-cache", dest="use_prefix_cache",
+                    action="store_false",
+                    help="disable prefix-KV reuse (the audit flags this "
+                         "on shared-prefix workloads)")
+    ap.add_argument("--no-audit", dest="audit", action="store_false",
+                    help="skip runtime pathway auditing")
     args = ap.parse_args()
-    print(json.dumps(serve(args.arch, n_requests=args.requests,
-                           slots=args.slots, max_len=args.max_len,
-                           max_new=args.max_new, engine=args.engine,
-                           block_size=args.block_size, chunk=args.chunk,
-                           shared_prefix=args.shared_prefix), indent=1))
+    res = serve(args.arch, n_requests=args.requests,
+                slots=args.slots, max_len=args.max_len,
+                max_new=args.max_new, engine=args.engine,
+                block_size=args.block_size, chunk=args.chunk,
+                shared_prefix=args.shared_prefix,
+                use_prefix_cache=args.use_prefix_cache, audit=args.audit)
+    print(json.dumps(res, indent=1))
+    if res.get("audit") and not res["audit"]["gate_ok"]:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

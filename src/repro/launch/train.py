@@ -17,6 +17,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.audit import AuditContext, RunAudit
 from repro.configs import SHAPES, TINY_MESH
 from repro.configs.base import RunConfig, ShapeConfig, TrainConfig, reduced
 from repro.core import Diagnostics, Manifest, PortableEnv, parse_hlo
@@ -55,6 +56,9 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
     out.mkdir(parents=True, exist_ok=True)
     ckpt = CheckpointManager(out / "ckpt")
     diag = Diagnostics()
+    audit = RunAudit(AuditContext(workload="train", family=cfg.family,
+                                  arch=cfg.name,
+                                  mesh=tuple(mesh.devices.shape)))
 
     with ctx_bind(mesh, rules_for(run)):
         step_fn = make_train_step(model, run)
@@ -68,6 +72,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
         if resume and ckpt.latest_step() is not None:
             start_step = ckpt.latest_step()
             state = ckpt.restore(start_step, like=state, shardings=st_sh)
+            audit.tracer.emit("ckpt-restore", step=start_step)
             print(f"[train] resumed from step {start_step}")
         state = jax.device_put(state, st_sh)
 
@@ -96,16 +101,24 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
             step_id, host_batch = next(data)
             batch = jax.device_put(host_batch, b_sh)
             t0 = time.perf_counter()
-            state, metrics = jitted(state, batch)
-            loss = float(metrics["loss"])
+            with audit.tracer.span("train-step", step=step_id) as ev:
+                state, metrics = jitted(state, batch)
+                loss = float(metrics["loss"])
+                ev["loss"] = loss
             dt = time.perf_counter() - t0
             tracker.observe({jax.process_index(): dt})
             losses.append(loss)
             if (step_id + 1) % ckpt_every == 0 or step_id + 1 == steps:
-                ckpt.save(step_id + 1, state,
-                          extra={"loss": loss,
-                                 "image_hash": manifest.portable.image_hash})
+                with audit.tracer.span("ckpt-save", step=step_id + 1):
+                    ckpt.save(step_id + 1, state,
+                              extra={"loss": loss,
+                                     "image_hash":
+                                     manifest.portable.image_hash})
         data.close()
+        # pathway expectations over the attested transport report: the
+        # same HLO the manifest records is judged against what this
+        # (family, mesh, workload) should emit
+        audit.finish(diag, transport=report, source="train-audit")
 
     result = {
         "arch": cfg.name,
@@ -116,6 +129,11 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
         "wall_s": round(time.time() - t_start, 2),
         "fleet_efficiency": tracker.fleet_efficiency(),
         "diagnostics": diag.worst,
+        "audit": {
+            "trace": audit.tracer.summary()["counts"],
+            "findings": diag.findings,
+            "gate_ok": diag.gate(),
+        },
         "image_hash": manifest.portable.image_hash,
         "wireup": vars(wireup),
     }

@@ -86,6 +86,90 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict[str, Any]:
     raise ValueError(fam)
 
 
+# ======================================================== compile watching
+
+
+class CompileWatcher:
+    """Cache-miss counter around a jitted step callable.
+
+    Recompilation on the serving hot path is a pathway misconfiguration
+    (shape polymorphism leaking into what must be a fixed-shape program):
+    output stays token-identical while every new shape pays a full XLA
+    compile.  The watcher keys each call by the argument tree's
+    (shape, dtype) signature — a new key is a compile-cache miss — and
+    cross-checks ``fn._cache_size()`` where the jit object exposes it, so
+    same-shape recompiles (donation/layout churn) are counted too.
+
+    ``on_compile(name, reason, signature)`` fires once per detected
+    compile; engines wire it to their tracer.  Overhead per call is one
+    tree flatten over a handful of arrays — noise next to a dispatched
+    step.
+    """
+
+    def __init__(self, fn, name: str, on_compile=None):
+        self.fn = fn
+        self.name = name
+        self.on_compile = on_compile
+        self.calls = 0
+        self.compiles = 0
+        self._seen: set = set()
+        self._base_cache: int | None = None
+        self._first_arg_sig: tuple | None = None  # (arg ref, signature)
+
+    @staticmethod
+    def _leaf_sig(tree) -> tuple:
+        return tuple(
+            (tuple(x.shape), str(x.dtype))
+            for x in jax.tree.leaves(tree)
+            if hasattr(x, "shape") and hasattr(x, "dtype"))
+
+    def _signature(self, args) -> tuple:
+        """(shape, dtype) key of the argument tree.  The first argument
+        is the params pytree — the same (large) object every call — so
+        its sub-signature is computed once and reused by identity; the
+        per-call cost is flattening only the small cache/token/pos args."""
+        if not args:
+            return ()
+        first, rest = args[0], args[1:]
+        if self._first_arg_sig is None or self._first_arg_sig[0] is not first:
+            self._first_arg_sig = (first, self._leaf_sig(first))
+        return self._first_arg_sig[1] + self._leaf_sig(rest)
+
+    def _cache_size(self) -> int | None:
+        probe = getattr(self.fn, "_cache_size", None)
+        if not callable(probe):
+            return None
+        try:
+            return probe()
+        except Exception:  # noqa: BLE001 - diagnostic only, never fatal
+            return None
+
+    def _fire(self, reason: str, sig: tuple) -> None:
+        self.compiles += 1
+        if self.on_compile is not None:
+            self.on_compile(self.name, reason, sig)
+
+    def __call__(self, *args):
+        if self.calls == 0:
+            # baseline for a jit cache shared with other engines: growth
+            # is judged relative to what was already compiled before us
+            self._base_cache = self._cache_size()
+        self.calls += 1
+        sig = self._signature(args)
+        if sig not in self._seen:
+            self._seen.add(sig)
+            self._fire("new-shapes", sig)
+        out = self.fn(*args)
+        n = self._cache_size()
+        if (n is not None and self._base_cache is not None
+                and n - self._base_cache > len(self._seen)):
+            # more entries appeared than our shape keys explain: a
+            # same-shape recompile (donation/layout churn)
+            self._base_cache = n - len(self._seen)
+            self._fire("cache-grew", sig)
+        return out
+
+
 # ================================================================= prefill
 
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.audit.trace import NULL_TRACER, Tracer
+from repro.models.decode import CompileWatcher
 from repro.models.model import Model
 from repro.serve.paging import (BlockAllocator, KVPool, PrefixCache,
                                 chain_hashes, pages_for)
@@ -56,7 +58,7 @@ class EngineStats:
 
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, tracer: Tracer | None = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -66,8 +68,17 @@ class ServeEngine:
         self.pos = np.zeros((slots,), np.int32)       # next write position
         self.active: dict[int, Request] = {}          # slot -> request
         self.stats = EngineStats()
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.trace = tracer or NULL_TRACER
+        self._decode = CompileWatcher(
+            jax.jit(model.decode_step, donate_argnums=(1,)), "decode_step",
+            on_compile=self._on_compile)
         self._last_token = np.zeros((slots, 1), np.int32)
+        self.trace.emit("engine-init", engine="contiguous",
+                        family=model.cfg.family, arch=model.cfg.name,
+                        slots=slots, max_len=max_len)
+
+    def _on_compile(self, fn: str, reason: str, sig: tuple) -> None:
+        self.trace.emit("compile", fn=fn, reason=reason, signature=sig)
 
     # ------------------------------------------------------------ admit
     def _free_slots(self) -> list[int]:
@@ -76,6 +87,9 @@ class ServeEngine:
     def _admit(self, req: Request, slot: int) -> None:
         """Prefill the prompt into this slot serially (single-slot prefill;
         a production engine would batch same-length prompts)."""
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt (decoding "
+                             f"needs at least one token of context)")
         req.t_submit = req.t_submit or time.perf_counter()
         tokens = req.prompt[-(self.max_len - req.max_new):]
         # step the prompt through decode one token at a time into the slot
@@ -92,6 +106,8 @@ class ServeEngine:
         req.t_first = time.perf_counter()
         self._last_token[slot, 0] = nxt
         self.active[slot] = req
+        self.trace.emit("admit", rid=req.rid, slot=slot,
+                        prompt_tokens=len(tokens), cached_tokens=0)
 
     # ------------------------------------------------------------- run
     def run(self, requests: list[Request]) -> list[Request]:
@@ -108,6 +124,8 @@ class ServeEngine:
                 jnp.asarray(self._last_token), jnp.asarray(self.pos))
             self.stats.decode_steps += 1
             self.stats.batch_occupancy.append(len(self.active))
+            self.trace.emit("step", step_kind="decode",
+                            lanes=len(self.active))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
 
             finished = []
@@ -122,9 +140,23 @@ class ServeEngine:
                     req.t_done = time.perf_counter()
                     finished.append(slot)
             for slot in finished:
-                done.append(self.active.pop(slot))
+                req = self.active.pop(slot)
+                self.trace.emit("finish", rid=req.rid, slot=slot,
+                                tokens_out=len(req.out))
+                done.append(req)
                 self.stats.served += 1
         return done
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict:
+        return {
+            "engine": "contiguous",
+            "served": self.stats.served,
+            "decode_steps": self.stats.decode_steps,
+            "tokens_out": self.stats.tokens_out,
+            "mean_batch_occupancy": round(self.stats.mean_occupancy, 2),
+            "compiles": self._decode.compiles,
+        }
 
 
 # ================================================================== paged
@@ -186,7 +218,8 @@ class PagedServeEngine:
     def __init__(self, model: Model, params: Any, *, slots: int = 4,
                  max_len: int = 256, block_size: int = 16,
                  num_blocks: int | None = None, chunk: int = 8,
-                 tick_dt: float = 1.0):
+                 tick_dt: float = 1.0, use_prefix_cache: bool = True,
+                 tracer: Tracer | None = None):
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine needs an attention cache (dense/moe); "
@@ -203,15 +236,31 @@ class PagedServeEngine:
             num_blocks = 2 * slots * pages_for(max_len, block_size)
         self.alloc = BlockAllocator(num_blocks, block_size)
         self.prefix = PrefixCache(self.alloc)
+        self.prefix_enabled = use_prefix_cache
         self.pool = KVPool(num_blocks, block_size, layers, n_kv, hd, k.dtype)
         self.now = 0.0
         self.tick_dt = tick_dt
-        self.sched = Scheduler(slots=slots, clock=lambda: self.now)
+        # engine events carry ``tick`` (the synthetic clock) in their
+        # payload rather than rebinding the caller-owned tracer's clock:
+        # replayed traces (same prompts, priorities, arrivals) still
+        # produce identical (kind, data) streams, and a tracer shared
+        # with other emitters keeps its own timestamps
+        self.trace = tracer or NULL_TRACER
+        self.sched = Scheduler(slots=slots, clock=lambda: self.now,
+                               tracer=self.trace)
         self.active: dict[int, _Slot] = {}
         self.stats = EngineStats()
         self.pstats = PagedStats()
         self.ttft_ticks: list[float] = []   # first-token latency, tick clock
-        self._chunk_fn = _chunk_fn_for(model)
+        self._chunk_fn = CompileWatcher(
+            _chunk_fn_for(model), "decode_chunk",
+            on_compile=lambda fn, reason, sig: self.trace.emit(
+                "compile", fn=fn, reason=reason, signature=sig))
+        self.trace.emit("engine-init", engine="paged",
+                        family=model.cfg.family, arch=model.cfg.name,
+                        slots=slots, max_len=max_len, block_size=block_size,
+                        chunk=chunk, pages=num_blocks,
+                        prefix_cache=use_prefix_cache)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request, *, arrival: float | None = None
@@ -219,6 +268,9 @@ class PagedServeEngine:
         # reject statically-unplaceable requests here, where only the bad
         # request fails — once queued, it would starve everything behind
         # it (strict head-of-line) without ever becoming admissible
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt (decoding "
+                             f"needs at least one token of context)")
         worst = pages_for(len(self._feed_of(req)) + req.max_new,
                           self.alloc.block_size)
         if worst > self.alloc.num_blocks:
@@ -242,7 +294,8 @@ class PagedServeEngine:
         feed = self._feed_of(req)
         total = pages_for(len(feed) + req.max_new - len(req.out),
                           self.alloc.block_size)
-        matched = self.prefix.peek(feed, max_tokens=len(feed) - 1)
+        matched = (self.prefix.peek(feed, max_tokens=len(feed) - 1)
+                   if self.prefix_enabled else 0)
         return total - matched // self.alloc.block_size
 
     # ------------------------------------------------------------- admit
@@ -253,8 +306,11 @@ class PagedServeEngine:
         feed = self._feed_of(req)
         total = pages_for(len(feed) + req.max_new - len(req.out), bs)
         # leave ≥1 token to feed so the last-position logits exist
-        matched_len, shared = self.prefix.match(feed,
-                                                max_tokens=len(feed) - 1)
+        if self.prefix_enabled:
+            matched_len, shared = self.prefix.match(feed,
+                                                    max_tokens=len(feed) - 1)
+        else:
+            matched_len, shared = 0, []
         need = total - len(shared)
         if need > self.alloc.num_free:
             self.prefix.evict(need - self.alloc.num_free)
@@ -280,11 +336,16 @@ class PagedServeEngine:
             pending=feed[matched_len:], consumed=matched_len,
             shared=shared, private=private, registered=matched_len // bs)
         self.sched.mark_running(entry, slot, len(private))
+        self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
+                        feed_tokens=len(feed), cached_tokens=matched_len,
+                        new_pages=len(private), shared_pages=len(shared))
         return True
 
     def _register_blocks(self, slot: int, st: _Slot) -> None:
         """Publish newly completed full prompt blocks to the prefix cache
         (copy rows out to a private page; first writer wins)."""
+        if not self.prefix_enabled:
+            return
         bs = self.alloc.block_size
         while (st.registered < len(st.hashes)
                and (st.registered + 1) * bs <= st.consumed):
@@ -309,11 +370,16 @@ class PagedServeEngine:
 
     def _preempt(self, entry: SchedEntry) -> None:
         st = self.active.pop(entry.slot)
+        self.trace.emit("preempt", rid=st.req.rid, slot=entry.slot,
+                        tick=self.now, consumed=st.consumed,
+                        released_pages=len(st.shared) + len(st.private))
         self._release(st)
         self.sched.mark_preempted(entry)
 
     def _finish(self, slot: int) -> Request:
         st = self.active.pop(slot)
+        self.trace.emit("finish", rid=st.req.rid, slot=slot, tick=self.now,
+                        tokens_out=len(st.req.out))
         self._release(st)
         self.sched.mark_done(st.entry)
         self.stats.served += 1
@@ -364,6 +430,16 @@ class PagedServeEngine:
             jnp.asarray(n_new))
         self.stats.decode_steps += 1
         self.stats.batch_occupancy.append(len(self.active))
+        if self.trace.enabled:       # keep the untraced tick allocation-free
+            # lane kind comes from pending state, not chunk size: a
+            # 1-token final prefill chunk is still a prefill lane
+            lanes = [(int(n_new[s]), bool(st.pending))
+                     for s, st in self.active.items()]
+            self.trace.emit(
+                "step", step_kind="chunk", tick=self.now, lanes=len(lanes),
+                prefill_lanes=sum(1 for _, p in lanes if p),
+                decode_lanes=sum(1 for _, p in lanes if not p),
+                chunk_sizes=tuple(n for n, _ in lanes))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
 
         finished: list[int] = []
@@ -413,7 +489,11 @@ class PagedServeEngine:
             "page_peak_utilization": round(
                 self.alloc.stats.peak_in_use / self.alloc.num_blocks, 3),
             "pages": self.alloc.num_blocks,
+            "block_size": self.alloc.block_size,
+            "chunk": self.chunk,
+            "prefix_cache": self.prefix_enabled,
             "preemptions": self.sched.stats.preemptions,
+            "compiles": self._chunk_fn.compiles,
         }
 
 

@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.audit.trace import NULL_TRACER, Tracer
+
 WAITING = "waiting"
 RUNNING = "running"
 PREEMPTED = "preempted"
@@ -62,9 +64,11 @@ class SchedStats:
 
 class Scheduler:
     def __init__(self, *, slots: int,
-                 clock: Callable[[], float] | None = None):
+                 clock: Callable[[], float] | None = None,
+                 tracer: Tracer | None = None):
         self.slots = slots
         self.clock = clock or time.perf_counter
+        self.trace = tracer or NULL_TRACER
         self._seq = itertools.count()
         self.waiting: list[SchedEntry] = []
         self.running: list[SchedEntry] = []
@@ -126,17 +130,24 @@ class Scheduler:
 
     # ------------------------------------------------------- state changes
     def mark_running(self, e: SchedEntry, slot: int, held_pages: int) -> None:
-        if e.state == PREEMPTED:
+        readmit = e.state == PREEMPTED
+        if readmit:
             self.stats.readmissions += 1
         self.waiting.remove(e)
         self.running.append(e)
         e.state, e.slot, e.held_pages = RUNNING, slot, held_pages
         e.t_admitted = self.clock()
         self.stats.admissions += 1
+        self.trace.emit("sched-readmit" if readmit else "sched-admit",
+                        seq=e.seq, priority=e.priority, slot=slot,
+                        held_pages=held_pages,
+                        wait=e.t_admitted - e.arrival)
 
     def mark_preempted(self, e: SchedEntry) -> None:
         self.running.remove(e)
         self.waiting.append(e)
+        self.trace.emit("sched-preempt", seq=e.seq, priority=e.priority,
+                        slot=e.slot, released_pages=e.held_pages)
         e.state, e.slot, e.held_pages = PREEMPTED, None, 0
         e.preemptions += 1
         self.stats.preemptions += 1
@@ -144,3 +155,4 @@ class Scheduler:
     def mark_done(self, e: SchedEntry) -> None:
         self.running.remove(e)
         e.state, e.slot, e.held_pages = DONE, None, 0
+        self.trace.emit("sched-done", seq=e.seq, priority=e.priority)

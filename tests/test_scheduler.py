@@ -99,6 +99,48 @@ def test_preempts_lowest_priority_most_recent_victim():
     assert v2 in sched.waiting                # recompute on readmission
 
 
+def test_victim_ordering_lowest_priority_then_most_recent_first():
+    """Victim pool order is (priority asc, seq desc): among candidates of
+    the lowest priority the most recently submitted goes first (cheapest
+    recompute), and higher-but-still-lower priorities are only reached
+    once the tier below is exhausted."""
+    sched, _ = _sched(slots=3)
+    v_old = sched.submit("v_old", priority=0)       # seq 0
+    v_mid = sched.submit("v_mid", priority=1)       # seq 1
+    v_new = sched.submit("v_new", priority=0)       # seq 2
+    for e, slot in ((v_old, 0), (v_mid, 1), (v_new, 2)):
+        sched.mark_running(e, slot=slot, held_pages=2)
+
+    sched.submit("hi", priority=5)
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=lambda e: 6)
+    # needs 3 victims' pages: pri-0 tier first (newest before oldest),
+    # then the pri-1 entry
+    assert [e.req for e in plan.preempt] == ["v_new", "v_old", "v_mid"]
+
+
+def test_victims_must_be_strictly_lower_priority_even_mid_pick():
+    """A candidate that exhausts the strictly-lower tier stops there: it
+    must not extend the victim list with equal-priority entries, and a
+    partial pick that cannot buy admission is rolled back."""
+    sched, _ = _sched(slots=2)
+    lo = sched.submit("lo", priority=0)
+    peer = sched.submit("peer", priority=1)
+    for e, slot in ((lo, 0), (peer, 1)):
+        sched.mark_running(e, slot=slot, held_pages=2)
+
+    sched.submit("cand", priority=1)
+    # evicting lo alone frees 2 pages; cand needs 4 and peer (equal
+    # priority) is untouchable -> no admission AND no futile eviction
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=lambda e: 4)
+    assert not plan.admit and not plan.preempt
+    assert lo.state == RUNNING and peer.state == RUNNING
+
+    # with a feasible demand the strictly-lower victim is taken alone
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=lambda e: 2)
+    assert [e.req for e in plan.admit] == ["cand"]
+    assert [e.req for e in plan.preempt] == ["lo"]
+
+
 def test_never_preempts_equal_or_higher_priority():
     sched, _ = _sched(slots=1)
     run = sched.submit("run", priority=2)

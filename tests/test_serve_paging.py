@@ -176,6 +176,62 @@ def test_eviction_respects_references_and_lru():
     assert alloc.in_use == 0
 
 
+def test_lru_eviction_under_refcount_pressure():
+    """Eviction strictly respects both axes at once: entries with reader
+    references are never reclaimed no matter the pressure, and among the
+    unreferenced ones the reclaim order is LRU — insertion order adjusted
+    by ``match`` touches."""
+    alloc = BlockAllocator(32, 4)
+    cache = PrefixCache(alloc)
+    entries = [list(range(4 * i, 4 * i + 4)) for i in range(6)]
+    pages = [_register(cache, e)[0] for e in entries]
+
+    # readers hold entries 1 and 3 (refcount pressure)
+    held: list[int] = []
+    for i in (1, 3):
+        _, bids = cache.match(entries[i])
+        held += bids
+    # touch entry 0 so LRU order among unreferenced becomes 2, 4, 5, 0
+    _, touch = cache.match(entries[0])
+    for b in touch:
+        alloc.decref(b)
+
+    assert cache.evictable() == 4
+    # demand more than is reclaimable: only the 4 unreferenced ones go
+    assert cache.evict(100) == 4
+    for i in (2, 4, 5, 0):
+        assert alloc.refcount(pages[i]) == 0, i
+        assert cache.peek(entries[i]) == 0            # gone from the map
+    for i in (1, 3):
+        assert alloc.refcount(pages[i]) == 2, i       # cache + reader
+        assert cache.peek(entries[i]) == 4            # still served
+
+    # pressure released: the survivors become reclaimable, LRU first
+    for b in held:
+        alloc.decref(b)
+    assert cache.evict(1) == 1
+    assert alloc.refcount(pages[1]) == 0              # older of the two
+    assert alloc.refcount(pages[3]) == 1
+    assert cache.evict(10) == 1
+    alloc.check()
+    assert alloc.in_use == 0 and len(cache) == 0
+
+
+def test_partial_eviction_takes_lru_prefix_of_unreferenced():
+    """Asking for fewer pages than are evictable reclaims exactly the
+    LRU-first prefix, skipping referenced entries in between."""
+    alloc = BlockAllocator(32, 4)
+    cache = PrefixCache(alloc)
+    entries = [list(range(4 * i, 4 * i + 4)) for i in range(4)]
+    pages = [_register(cache, e)[0] for e in entries]
+    _, held = cache.match(entries[0])                 # pin the oldest
+    assert cache.evict(2) == 2                        # skips 0, takes 1, 2
+    assert alloc.refcount(pages[0]) == 2
+    assert [alloc.refcount(pages[i]) for i in (1, 2, 3)] == [0, 0, 1]
+    for b in held:
+        alloc.decref(b)
+
+
 def test_insert_first_writer_wins():
     alloc = BlockAllocator(8, 4)
     cache = PrefixCache(alloc)
