@@ -1,16 +1,25 @@
 """Audit-pathway benchmark: the detector must catch what the oracle can't.
 
-``compare_engines`` proves two serving pathways emit identical greedy
-token streams — it is blind to *how* they got there.  This benchmark
-seeds three misconfigurations that keep outputs token-identical while
-degrading the pathway (the paper's "suboptimal transport pathway" class,
-§8), and asserts the audit pipeline flags each as an error:
+``compare_engines`` proves two serving pathways emit identical token
+streams (greedy and sampled) — it is blind to *how* they got there.
+This benchmark seeds four misconfigurations that keep outputs
+token-identical while degrading the pathway (the paper's "suboptimal
+transport pathway" class, §8), and asserts the audit pipeline flags each
+as an error:
 
   1. forced contiguous fallback on a dense arch (full-batch per-token
      prefill instead of paged chunked prefill);
   2. shrunk page size (per-page overhead up, prefix granularity down);
   3. disabled prefix cache (every admission recomputes the shared
-     prefix).
+     prefix);
+  4. slow admission (scheduler only consulted every N-th tick): streams
+     are unchanged but per-request TTFT inflates — caught by the
+     registry's per-request latency expectations over the lifecycle
+     trace events (submit / first-token / finish).
+
+A request-lifecycle probe additionally runs sampled + cancelled requests
+through the audited pathway and gates on their events being visible in
+the trace and on cancellation releasing every page reference.
 
 A detector miss — a seeded run the registry does NOT flag — is itself an
 ``error`` finding, so CI gates on the audit pipeline's sensitivity, not
@@ -50,7 +59,17 @@ SEEDS = {
     "contiguous-fallback": "pathway-engine-selection",
     "shrunk-page-size": "pathway-page-geometry",
     "disabled-prefix-cache": "pathway-prefix-cache",
+    "slow-admission": "pathway-ttft",
 }
+
+#: Slow-admission seed: scheduler consulted every N-th tick only.
+ADMIT_EVERY = 8
+
+#: TTFT bound = this factor over the healthy run's worst per-request
+#: TTFT (both runs are deterministic on the synthetic tick clock, so
+#: the margin only needs to separate healthy jitter=0 from the seeded
+#: inflation, not absorb noise).
+TTFT_MARGIN = 1.25
 
 
 def _ctx(cfg, shared_prefix=True):
@@ -63,11 +82,12 @@ def _ctx(cfg, shared_prefix=True):
 def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
           ledger_dir: str | None = None,
           update_baseline: bool = False) -> dict:
-    from repro.audit import Ledger, MetricSpec, RunAudit
+    from repro.audit import (Evidence, ExpectedSignature, Ledger, MetricSpec,
+                             Rule, RunAudit)
+    from repro.serve import (PagedServeEngine, SamplingParams, ServeEngine,
+                             compare_engines, token_matrix)
     from repro.configs import ALL_ARCHS, reduced
     from repro.models import build
-    from repro.serve.engine import (PagedServeEngine, ServeEngine,
-                                    compare_engines, token_matrix)
 
     if smoke:
         n_req, shared, tails, max_new = 6, 16, (3, 6), 4
@@ -85,13 +105,22 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
     findings: list[dict] = []
 
     # ------------------------------------------------ oracle stays green
-    verify = compare_engines(model, params, make, slots=slots,
-                             max_len=max_len, block_size=block, chunk=chunk)
-    for v in verify.verdicts:
-        if not v.ok:
-            findings.append({"severity": "error",
-                             "kind": f"serve-oracle-{v.kind}",
-                             "detail": v.detail})
+    # greedy AND sampled: counter-based per-request PRNG keys make the
+    # sampled streams engine-independent, so the dual-environment verdict
+    # is the same bit-identity in both modes
+    sampled = SamplingParams(temperature=0.8, top_k=20, top_p=0.95,
+                             seed=seed + 1)
+    oracle_ok: dict[str, bool] = {}
+    for mode, sp in (("greedy", None), ("sampled", sampled)):
+        verify = compare_engines(model, params, make, slots=slots,
+                                 max_len=max_len, block_size=block,
+                                 chunk=chunk, sampling=sp)
+        oracle_ok[mode] = verify.ok
+        for v in verify.verdicts:
+            if not v.ok:
+                findings.append({"severity": "error",
+                                 "kind": f"serve-oracle-{mode}-{v.kind}",
+                                 "detail": v.detail})
 
     # --------------------------------------------------- healthy pathway
     audit = RunAudit(_ctx(cfg))
@@ -103,6 +132,19 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
     wall = time.perf_counter() - t0
     healthy_tokens = token_matrix(done, n_req, max_new)
     rep = eng.report()
+
+    # calibrate the per-request latency expectation from the healthy
+    # run's lifecycle events: the schedule is deterministic (synthetic
+    # tick clock), so the bound is a clean separator, not a noise band
+    healthy_lat = Evidence(tracer=audit.tracer).request_latencies()
+    ttft_bound = TTFT_MARGIN * max(
+        latency["ttft_ticks"] for latency in healthy_lat.values())
+    ttft_rule = Rule(
+        name="bench-ttft-slo", families=("dense", "moe"),
+        workloads=("bench:audit_pathways",),
+        expect=ExpectedSignature(max_ttft_ticks=ttft_bound))
+    audit.registry.register(ttft_rule)
+
     healthy = audit.evaluate(engine_report=rep)
     findings.extend(healthy)        # a dirty healthy run is a real failure
 
@@ -120,12 +162,26 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
                                 block_size=block, chunk=chunk,
                                 use_prefix_cache=False, tracer=tracer)
 
+    def slow_admission(tracer):
+        return PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=block, chunk=chunk,
+                                admit_every=ADMIT_EVERY, tracer=tracer)
+
     builders = {"contiguous-fallback": contiguous_fallback,
                 "shrunk-page-size": shrunk_page,
-                "disabled-prefix-cache": no_prefix_cache}
+                "disabled-prefix-cache": no_prefix_cache,
+                "slow-admission": slow_admission}
     detections = {}
     for name, build_eng in builders.items():
         s_audit = RunAudit(_ctx(cfg))
+        # the latency SLO applies to every paged seeded run (the
+        # contiguous fallback ticks a different clock, so the bound is
+        # not comparable).  Other seeds may legitimately trip it too —
+        # recomputing the shared prefix (disabled cache) also delays
+        # first tokens; detection below only requires the *expected*
+        # kind to be present, not exclusivity.
+        if name != "contiguous-fallback":
+            s_audit.registry.register(ttft_rule)
         s_eng = build_eng(s_audit.tracer)
         s_done = s_eng.run(make())
         s_findings = s_audit.evaluate(engine_report=s_eng.report())
@@ -151,6 +207,48 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
                 "detail": f"seeded misconfiguration {name!r} changed the "
                           f"token stream — it must degrade the pathway, "
                           f"not the answer"})
+
+    # ------------------------------------ request-lifecycle probe: the
+    # cancel and sampling pathways must be *visible* in the audit trace
+    # (submit carries the sampling policy; cancel releases every page)
+    life_audit = RunAudit(_ctx(cfg))
+    life_audit.registry.register(ttft_rule)
+    life_eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=block, chunk=chunk,
+                                tracer=life_audit.tracer)
+    life_reqs = make()
+    for r in life_reqs:
+        r.sampling = sampled
+    handles = [life_eng.submit(r) for r in life_reqs]
+    life_eng.step()                      # victims are mid-prefill here
+    handles[0].cancel()                  # running (prefill or decode)
+    handles[-1].cancel()                 # still waiting (n_req > slots)
+    life_eng.drain()
+    findings.extend(life_audit.evaluate(engine_report=life_eng.report()))
+    counts = life_audit.tracer.summary()["counts"]
+    sampled_submits = sum(
+        1 for e in life_audit.tracer.events("submit")
+        if e.data.get("sampling", "greedy") != "greedy")
+    lifecycle = {
+        "cancelled": life_eng.stats.cancelled,
+        "served": life_eng.stats.served,
+        "cancel_events": counts.get("cancel", 0),
+        "first_token_events": counts.get("first-token", 0),
+        "sampled_submits": sampled_submits,
+        "pages_in_use_after": life_eng.alloc.in_use,
+        "prefix_entries": len(life_eng.prefix),
+    }
+    if counts.get("cancel", 0) < 2 or sampled_submits < n_req:
+        findings.append({
+            "severity": "error", "kind": "audit-lifecycle-trace",
+            "detail": f"request-lifecycle events missing from the trace: "
+                      f"{lifecycle}"})
+    if life_eng.alloc.in_use != len(life_eng.prefix):
+        findings.append({
+            "severity": "error", "kind": "audit-cancel-leak",
+            "detail": f"cancellation leaked pages: {life_eng.alloc.in_use} "
+                      f"in use vs {len(life_eng.prefix)} prefix-cache "
+                      f"registrations"})
 
     # --------------------------------- perf ledger (opt-in, like every
     # serving benchmark: only a caller that names a ledger dir gates on
@@ -179,10 +277,13 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
         "bench": "audit_pathways",
         "arch": cfg.name,
         "mode": "smoke" if smoke else "full",
-        "oracle_ok": verify.ok,
+        "oracle_ok": all(oracle_ok.values()),
+        "oracle_modes": oracle_ok,
+        "ttft_bound_ticks": round(ttft_bound, 2),
         "healthy_findings": healthy,
         "detections": detections,
         "detected_all": all(d["detected"] for d in detections.values()),
+        "lifecycle": lifecycle,
         "trace": audit.tracer.summary(),
         "metrics": metrics,
         "ledger": ledger_out,

@@ -75,8 +75,13 @@ def _trace_factory(vocab: int, *, n_requests: int, shared_len: int,
 
 
 def _timed_run(eng, reqs, arrivals=None) -> tuple[float, int]:
+    """Submit + drain through the unified lifecycle API (both engines
+    implement the serve.api.Engine protocol, so one call shape covers
+    the contiguous oracle and the paged path)."""
     t0 = time.perf_counter()
-    done = eng.run(reqs, arrivals) if arrivals is not None else eng.run(reqs)
+    for i, req in enumerate(reqs):
+        eng.submit(req, arrival=arrivals[i] if arrivals is not None else None)
+    done = eng.drain()
     wall = time.perf_counter() - t0
     return wall, sum(len(r.out) for r in done)
 

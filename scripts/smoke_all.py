@@ -3,18 +3,25 @@ plus the serving-throughput and audit-pathway smokes gated on their
 diagnostics findings.
 
     PYTHONPATH=src python scripts/smoke_all.py [archs...] [--json]
-        [--ledger-dir DIR] [--update-baseline]
+        [--ledger-dir DIR] [--update-baseline] [--artifacts-dir DIR]
 
 ``--json`` prints one machine-readable report (per-arch results, all
 findings, ledger deltas) on stdout's last line; the exit code is driven
 by ``Diagnostics.gate()`` either way — the paper's performance-verified
 bar, where an error finding fails the harness.
+
+``--artifacts-dir DIR`` publishes the run's evidence for CI archiving:
+the ``BENCH_*.json`` perf-ledger files (baselines + bounded history) and
+the machine-readable report, so a perf regression can be bisected across
+PRs from build artifacts alone (ROADMAP PR 2 follow-up).
 """
 import argparse
 import json
 import os
+import shutil
 import subprocess
 import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +89,9 @@ def main() -> int:
     ap.add_argument("--ledger-dir", default=REPO,
                     help="BENCH_*.json directory for the perf ledger")
     ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--artifacts-dir", default=None,
+                    help="copy the BENCH_*.json ledgers and the json "
+                         "report here (CI build artifacts)")
     args = ap.parse_args()
     names = args.archs or list(ALL_ARCHS)
     quiet = args.as_json
@@ -111,22 +121,39 @@ def main() -> int:
     }
     ok = diag.gate()
 
+    report = {
+        "ok": ok,
+        "worst": diag.worst,
+        "archs": archs,
+        "serve_throughput": {
+            k: serve_rec[k] for k in
+            ("speedup", "oracle_ok", "contiguous_tokens_per_s",
+             "paged_tokens_per_s")},
+        "audit_pathways": {
+            "oracle_ok": audit_rec["oracle_ok"],
+            "detected_all": audit_rec["detected_all"],
+            "lifecycle": audit_rec.get("lifecycle"),
+            "metrics": audit_rec["metrics"]},
+        "findings": diag.findings,
+        "ledger": ledger_deltas,
+    }
+
+    if args.artifacts_dir:
+        adir = Path(args.artifacts_dir)
+        adir.mkdir(parents=True, exist_ok=True)
+        copied = []
+        for f in sorted(Path(args.ledger_dir).glob("BENCH_*.json")):
+            shutil.copy2(f, adir / f.name)
+            copied.append(f.name)
+        # metadata goes in before writing, so the archived report itself
+        # names the ledgers that accompany it
+        report["artifacts"] = {"dir": str(adir),
+                               "ledgers": copied,
+                               "report": "smoke_report.json"}
+        (adir / "smoke_report.json").write_text(json.dumps(report, indent=1))
+
     if quiet:
-        print(json.dumps({
-            "ok": ok,
-            "worst": diag.worst,
-            "archs": archs,
-            "serve_throughput": {
-                k: serve_rec[k] for k in
-                ("speedup", "oracle_ok", "contiguous_tokens_per_s",
-                 "paged_tokens_per_s")},
-            "audit_pathways": {
-                "oracle_ok": audit_rec["oracle_ok"],
-                "detected_all": audit_rec["detected_all"],
-                "metrics": audit_rec["metrics"]},
-            "findings": diag.findings,
-            "ledger": ledger_deltas,
-        }))
+        print(json.dumps(report))
     else:
         print(diag.render())
         print(f"OK serve_throughput        speedup={serve_rec['speedup']}x "

@@ -68,6 +68,58 @@ class Evidence:
                 return ev.data
         return self.engine_report
 
+    def request_latencies(self) -> dict[int, dict]:
+        """Per-request lifecycle latencies on the engine tick clock,
+        computed from the request-lifecycle trace events.  Returns
+        rid -> {``ttft_ticks``, ``decode_gap_ticks`` (mean ticks per
+        token after the first; requires a finish event), ``tokens``}.
+        Cancelled requests are excluded — a cancelled stream has no
+        defined completion latency.
+
+        TTFT is read from the ``first-token`` event's own
+        ``ttft_ticks`` payload (engines stamp it at emission), with
+        ``tick - submit.arrival`` as a fallback — so the measurement
+        survives the bounded ring evicting old ``submit`` events on
+        long runs.  Requests whose *first-token* event itself was
+        evicted are necessarily absent: the latencies are the retained
+        window, not a lifetime census."""
+        if self.tracer is None:
+            return {}
+        arrival: dict[int, float] = {}
+        first: dict[int, dict] = {}
+        fin: dict[int, dict] = {}
+        cancelled: set[int] = set()
+        for e in self.tracer.events("submit"):
+            if "rid" in e.data:
+                arrival[e.data["rid"]] = e.data.get(
+                    "arrival", e.data.get("tick", 0.0))
+        for e in self.tracer.events("first-token"):
+            if "rid" in e.data:
+                first.setdefault(e.data["rid"], e.data)
+        for e in self.tracer.events("finish"):
+            if "rid" in e.data and "tick" in e.data:
+                fin[e.data["rid"]] = e.data
+        for e in self.tracer.events("cancel"):
+            cancelled.add(e.data.get("rid"))
+        out: dict[int, dict] = {}
+        for rid, ft in first.items():
+            if rid in cancelled:
+                continue
+            if "ttft_ticks" in ft:
+                rec = {"ttft_ticks": ft["ttft_ticks"]}
+            elif "tick" in ft and rid in arrival:
+                rec = {"ttft_ticks": ft["tick"] - arrival[rid]}
+            else:
+                continue
+            f = fin.get(rid)
+            if f is not None and "tick" in ft:
+                n = f.get("tokens_out", 1)
+                rec["decode_gap_ticks"] = ((f["tick"] - ft["tick"])
+                                           / max(n - 1, 1))
+                rec["tokens"] = n
+            out[rid] = rec
+        return out
+
     def compile_counts(self) -> dict[str, int]:
         """Per-jitted-function compile (cache-miss) counts.
 
@@ -97,6 +149,12 @@ class ExpectedSignature:
     min_block_size: int | None = None       # page geometry floor
     min_prefix_hit_rate: float | None = None  # gated on ctx.shared_prefix
     max_compiles_per_fn: int | None = None  # steady state: 1 per program
+    # per-request lifecycle latencies (engine tick clock, from the
+    # submit/first-token/finish trace events).  Bounds are workload
+    # properties — the defaults carry none; benchmarks and launchers
+    # register calibrated rules for traces whose latencies they know.
+    max_ttft_ticks: float | None = None
+    max_decode_gap_ticks: float | None = None
     allowed_collectives: frozenset[str] | None = None
     max_collective_group: int | None = None  # default: ctx.n_devices
     forbid_host_transfer: bool = False
@@ -193,6 +251,30 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                     f"{sig.min_prefix_hit_rate:.3f} on a shared-prefix "
                     f"workload: cache ineffective (mis-sized pages or "
                     f"broken registration)"))
+
+    if sig.max_ttft_ticks is not None or sig.max_decode_gap_ticks is not None:
+        lat = ev.request_latencies()
+        if lat:
+            if sig.max_ttft_ticks is not None:
+                rid, worst = max(((r, l["ttft_ticks"]) for r, l in lat.items()),
+                                 key=lambda x: x[1])
+                if worst > sig.max_ttft_ticks:
+                    out.append(_find(
+                        rule, "pathway-ttft",
+                        f"request {rid} first token after {worst:.1f} ticks "
+                        f"(> {sig.max_ttft_ticks:.1f}): admission latency "
+                        f"degraded (output streams stay identical, the "
+                        f"route to them slowed)"))
+            if sig.max_decode_gap_ticks is not None:
+                gaps = [(r, l["decode_gap_ticks"]) for r, l in lat.items()
+                        if "decode_gap_ticks" in l]
+                if gaps:
+                    rid, worst = max(gaps, key=lambda x: x[1])
+                    if worst > sig.max_decode_gap_ticks:
+                        out.append(_find(
+                            rule, "pathway-decode-latency",
+                            f"request {rid} averaged {worst:.2f} ticks per "
+                            f"decoded token (> {sig.max_decode_gap_ticks:.2f})"))
 
     if sig.max_compiles_per_fn is not None:
         for fn, n in ev.compile_counts().items():

@@ -12,6 +12,7 @@ from pathlib import Path
 
 import jax
 
+from repro.audit.trace import Tracer
 from repro.configs import ALL_ARCHS, SHAPES, applicable_shapes
 from repro.configs.base import RunConfig, TrainConfig
 from repro.core.inspector import hlo_cost, parse_hlo
@@ -41,8 +42,11 @@ def _default_microbatches(cfg, shape) -> int:
 def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 rules: str = "auto", remat: str = "full",
                 microbatches: int | None = None,
-                out_dir: str | None = None, verbose: bool = True) -> dict:
-    """Lower + compile one (arch × shape × mesh) cell; return the record."""
+                out_dir: str | None = None, verbose: bool = True,
+                tracer: Tracer | None = None) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell; return the record.
+    The cell's trace (lower/compile spans, error events) is dumped into
+    the artifact so a failed or slow sweep can be audited offline."""
     cfg = ALL_ARCHS[arch]
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -52,6 +56,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                     rules=rules, train=TrainConfig(remat=remat, microbatches=mb))
     model = build(cfg)
     n_dev = mesh.devices.size
+    trace = tracer or Tracer(capacity=256)
+    trace_start = trace.emitted      # dump only this cell's events below
 
     rec: dict = {
         "arch": arch, "shape": shape_name,
@@ -67,11 +73,15 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     try:
         with ctx_bind(mesh, rules_for(run)):
             fn, args, shards, out_shards, donate = abstract_cell(model, run, mesh)
-            lowered = jax.jit(fn, in_shardings=shards, out_shardings=out_shards,
-                              donate_argnums=donate).lower(*args)
+            with trace.span("dryrun-lower", arch=arch, shape=shape_name,
+                            mesh=rec["mesh"], rules=run.rules):
+                lowered = jax.jit(fn, in_shardings=shards,
+                                  out_shardings=out_shards,
+                                  donate_argnums=donate).lower(*args)
             rec["lower_s"] = round(time.time() - t0, 2)
             t1 = time.time()
-            compiled = lowered.compile()
+            with trace.span("dryrun-compile", arch=arch, shape=shape_name):
+                compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 2)
 
         mem = compiled.memory_analysis()
@@ -106,6 +116,16 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
+        trace.emit("dryrun-error", arch=arch, shape=shape_name,
+                   error=rec["error"].splitlines()[0][:200])
+
+    # ring dump into the artifact: the audit convention applied to the
+    # launcher itself (ROADMAP PR 2 follow-up) — what lowered/compiled,
+    # how long each stage took, and any error, machine-readable.  A
+    # shared tracer only contributes this cell's events to this artifact.
+    rec["trace"] = {"summary": trace.summary(),
+                    "events": [e.to_dict() for e in trace.events()
+                               if e.seq >= trace_start]}
 
     if verbose:
         flops = rec.get("cost", {}).get("flops", 0)

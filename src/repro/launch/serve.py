@@ -1,13 +1,19 @@
 """Serving driver: paged-KV engine over a smoke-scale model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
-        --requests 8 --slots 4
+        --requests 8 --slots 4 [--temperature 0.8 --top-k 20 --top-p 0.95]
 
 The paged path (prefix cache + chunked prefill + scheduler) is the
 default for attention-cache families; ``--engine contiguous`` selects the
 seed slot engine, which is also the automatic fallback for families the
 chunked decode does not cover (ssm/hybrid/vlm/encdec) and the
 dual-environment oracle for ``repro.serve.compare_engines``.
+
+Both engines are driven through the unified request-lifecycle API
+(``serve.api``): requests are submitted with per-request
+``SamplingParams`` (greedy by default; counter-based PRNG keys make
+sampled streams deterministic and engine-independent) and drained, and
+per-request TTFT comes from the audit tracer's lifecycle events.
 """
 from __future__ import annotations
 
@@ -18,21 +24,26 @@ import time
 import jax
 import numpy as np
 
-from repro.audit import AuditContext, RunAudit
+from repro.audit import AuditContext, Evidence, RunAudit
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
-from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve import (PagedServeEngine, Request, SamplingParams,
+                         ServeEngine)
 
 
 def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           max_len: int = 96, max_new: int = 16, seed: int = 0,
           engine: str = "paged", block_size: int = 8,
           chunk: int = 4, shared_prefix: int = 0,
-          use_prefix_cache: bool = True, audit: bool = True) -> dict:
+          use_prefix_cache: bool = True, audit: bool = True,
+          temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+          sampling_seed: int = 0) -> dict:
     cfg = reduced(resolve_arch(arch))
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
+    sampling = SamplingParams(temperature=temperature, top_k=top_k,
+                              top_p=top_p, seed=sampling_seed)
 
     if engine == "paged" and cfg.family not in ("dense", "moe"):
         engine = "contiguous"   # no chunked path for stateful caches yet
@@ -58,17 +69,20 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         Request(rid=i,
                 prompt=prefix + rng.integers(
                     0, cfg.vocab_size, size=rng.integers(4, 17)).tolist(),
-                max_new=max_new)
+                max_new=max_new, sampling=sampling)
         for i in range(n_requests)
     ]
     t0 = time.time()
-    done = eng.run(reqs)
+    for req in reqs:
+        eng.submit(req)
+    done = eng.drain()
     wall = time.time() - t0
 
     ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
     out = {
         "arch": cfg.name,
         "engine": engine,
+        "sampling": sampling.describe(),
         "served": eng.stats.served,
         "decode_steps": eng.stats.decode_steps,
         "tokens_out": eng.stats.tokens_out,
@@ -83,6 +97,11 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
                     ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
                      "page_peak_utilization", "preemptions")})
     if run_audit is not None:
+        lat = Evidence(tracer=run_audit.tracer).request_latencies()
+        if lat:
+            ttft_ticks = [l["ttft_ticks"] for l in lat.values()]
+            out["mean_ttft_ticks"] = round(float(np.mean(ttft_ticks)), 2)
+            out["max_ttft_ticks"] = round(float(np.max(ttft_ticks)), 2)
         diag = run_audit.finish(engine_report=eng.report(), source="serve")
         out["audit"] = {
             "findings": diag.findings,
@@ -106,6 +125,14 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=4)
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="length of a prompt prefix shared by all requests")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with counter-based "
+                         "per-request PRNG (deterministic, replayable)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = no limit)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus bound in (0, 1]")
+    ap.add_argument("--sampling-seed", type=int, default=0)
     ap.add_argument("--no-prefix-cache", dest="use_prefix_cache",
                     action="store_false",
                     help="disable prefix-KV reuse (the audit flags this "
@@ -118,7 +145,9 @@ def main() -> None:
                 max_new=args.max_new, engine=args.engine,
                 block_size=args.block_size, chunk=args.chunk,
                 shared_prefix=args.shared_prefix,
-                use_prefix_cache=args.use_prefix_cache, audit=args.audit)
+                use_prefix_cache=args.use_prefix_cache, audit=args.audit,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, sampling_seed=args.sampling_seed)
     print(json.dumps(res, indent=1))
     if res.get("audit") and not res["audit"]["gate_ok"]:
         raise SystemExit(1)

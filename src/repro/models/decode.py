@@ -525,3 +525,68 @@ def decode_chunk(cfg: ModelConfig, params: dict, cache: dict,
     x_last = rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
     logits = logits_from(params["embed"], cfg, x_last)[:, 0]
     return logits, {"self": {"k": ks, "v": vs}}
+
+
+# ============================================================ fused sampling
+
+
+def lane_keys(seed: jax.Array, rid: jax.Array, step: jax.Array) -> jax.Array:
+    """Counter-based per-lane PRNG keys: ``key = fold(fold(PRNGKey(seed),
+    rid), step)``.
+
+    Purely a function of (seed, request_id, step) — no generator state —
+    so the ``step``-th token of a request draws the same key on any
+    engine, in any slot, under any schedule, and a preempted request
+    recomputed from scratch resumes its stream exactly.  All inputs are
+    ``[B]``; the derivation is vmapped so the jitted step stays one fixed
+    shape.
+    """
+    def one(s, r, t):
+        k = jax.random.fold_in(jax.random.PRNGKey(s), r)
+        return jax.random.fold_in(k, t)
+
+    return jax.vmap(one)(seed, rid, step)
+
+
+def sample_from_logits(logits: jax.Array, lane: dict[str, jax.Array]
+                       ) -> jax.Array:
+    """Fused token selection: logits ``[B, V]`` -> tokens ``[B]`` int32.
+
+    ``lane`` carries per-lane ``[B]`` arrays: ``rid``/``step``/``seed``
+    (key derivation, see :func:`lane_keys`) and ``temperature``/
+    ``top_k``/``top_p`` (filtering).  ``temperature <= 0`` selects exact
+    greedy argmax for that lane (bit-identical to the pre-sampling
+    engines); ``top_k <= 0`` means no k-limit.  Every op is fixed-shape
+    in (B, V) regardless of the request mix — sampling introduces no
+    shape polymorphism, hence no recompiles on the serving hot path.
+
+    Filtering is rank-based on one descending sort: the top-k cut keeps
+    logits >= the k-th largest, the nucleus cut keeps the smallest set of
+    tokens whose exclusive cumulative probability stays under ``top_p``
+    (the argmax token always survives both).  The surviving set is
+    sampled via per-lane-keyed Gumbel argmax (``jax.random.categorical``).
+    """
+    b, v = logits.shape
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    temp = jnp.maximum(lane["temperature"], 1e-6)[:, None]
+    scaled = lg / temp
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k_eff = jnp.where(lane["top_k"] > 0, lane["top_k"], v)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(k_eff - 1, 0, v - 1)[:, None], axis=-1)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum_excl = jnp.cumsum(probs, axis=-1) - probs
+    # top_p >= 1 means no nucleus cut at all: bypass the comparison so
+    # float32 cumsum rounding can never mask extreme-tail tokens
+    p_bound = jnp.where(lane["top_p"] >= 1.0, jnp.inf, lane["top_p"])
+    keep = cum_excl < p_bound[:, None]            # row 0 always True
+    p_floor = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1,
+                      keepdims=True)
+    masked = jnp.where((scaled >= kth) & (scaled >= p_floor), scaled,
+                       -jnp.inf)
+
+    keys = lane_keys(lane["seed"], lane["rid"], lane["step"])
+    sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(lane["temperature"] > 0.0, sampled, greedy_tok)

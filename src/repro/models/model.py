@@ -57,6 +57,40 @@ class Model:
                      pos: jax.Array, n_new: jax.Array):
         return D.decode_chunk(self.cfg, params, cache, tokens, pos, n_new)
 
+    def decode_greedy_step(self, params: dict, cache: dict, token: jax.Array,
+                           pos: jax.Array):
+        """One-token decode with argmax fused into the jitted program:
+        returns (tokens [B] int32, new cache).  The all-greedy serving
+        fast path — only the selected token vector crosses to the host,
+        and none of the sampling pipeline (sort/softmax/cumsum) lowers."""
+        logits, cache = D.decode_step(self.cfg, params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def decode_greedy_chunk(self, params: dict, cache: dict,
+                            tokens: jax.Array, pos: jax.Array,
+                            n_new: jax.Array):
+        """Chunked decode with fused argmax (paged engine, all-greedy)."""
+        logits, cache = D.decode_chunk(self.cfg, params, cache, tokens, pos,
+                                       n_new)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def decode_sample_step(self, params: dict, cache: dict, token: jax.Array,
+                           pos: jax.Array, lane: dict):
+        """One-token decode with sampling fused into the jitted program:
+        returns (tokens [B] int32, new cache).  ``lane`` is the per-slot
+        sampling state (serve.api.LaneState.as_args()); greedy lanes
+        (temperature 0) still get exact argmax."""
+        logits, cache = D.decode_step(self.cfg, params, cache, token, pos)
+        return D.sample_from_logits(logits, lane), cache
+
+    def decode_sample_chunk(self, params: dict, cache: dict,
+                            tokens: jax.Array, pos: jax.Array,
+                            n_new: jax.Array, lane: dict):
+        """Chunked decode with fused sampling (the paged engine's step)."""
+        logits, cache = D.decode_chunk(self.cfg, params, cache, tokens, pos,
+                                       n_new)
+        return D.sample_from_logits(logits, lane), cache
+
     def cache_specs(self, batch: int, seq_len: int):
         return D.cache_specs(self.cfg, batch, seq_len)
 

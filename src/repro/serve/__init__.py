@@ -1,11 +1,20 @@
-"""Serving subsystem: paged KV cache, scheduler, and engines.
+"""Serving subsystem: paged KV cache, scheduler, engines, and the
+request-lifecycle API.
 
+- ``api``: the unified serving contract — ``SamplingParams`` (greedy /
+  temperature / top-k / top-p with counter-based per-request PRNG),
+  ``RequestHandle`` (streaming, ``result()``, ``cancel()``), the
+  ``Engine`` protocol (``submit / step / drain / cancel / report``) and
+  the ``run_requests`` compatibility shim.
 - ``paging``: BlockAllocator / PrefixCache / KVPool (page-level memory).
 - ``scheduler``: FCFS + priority admission with preemption-on-OOM.
 - ``engine``: ServeEngine (contiguous oracle) and PagedServeEngine
   (prefix caching + chunked prefill), tied together by
-  ``compare_engines`` — the dual-environment correctness verdict.
+  ``compare_engines`` — the dual-environment correctness verdict,
+  greedy and sampled.
 """
+from repro.serve.api import (GREEDY, Engine, LaneState, RequestHandle,
+                             SamplingParams, run_requests)
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
                                 compare_engines, token_matrix)
 from repro.serve.paging import (BlockAllocator, BlockAllocatorError, KVPool,
@@ -13,8 +22,9 @@ from repro.serve.paging import (BlockAllocator, BlockAllocatorError, KVPool,
 from repro.serve.scheduler import Plan, SchedEntry, Scheduler
 
 __all__ = [
-    "BlockAllocator", "BlockAllocatorError", "KVPool", "PrefixCache",
-    "PagedServeEngine", "Plan", "Request", "SchedEntry", "Scheduler",
+    "BlockAllocator", "BlockAllocatorError", "Engine", "GREEDY", "KVPool",
+    "LaneState", "PrefixCache", "PagedServeEngine", "Plan", "Request",
+    "RequestHandle", "SamplingParams", "SchedEntry", "Scheduler",
     "ServeEngine", "chain_hashes", "compare_engines", "pages_for",
-    "token_matrix",
+    "run_requests", "token_matrix",
 ]

@@ -1,10 +1,17 @@
 """Serving engines: contiguous slot caches (oracle) and the paged path.
 
+Both engines implement the ``serve.api.Engine`` protocol — ``submit /
+step / drain / cancel / report`` — so every caller (launchers, examples,
+benchmarks, the audit pipeline) speaks one request-lifecycle contract and
+the seed's two incompatible ``run()`` shapes survive only as the
+``api.run_requests`` compatibility shim.
+
 ``ServeEngine`` is the seed contiguous engine: a fixed-shape jitted
-``decode_step`` over B slots, serial per-token prefill at admission.  It is
+decode step over B slots, serial per-token prefill at admission.  It is
 kept as the *dual-environment oracle* — the paged engine's correctness
 proof is a ``compare_engines`` verdict (core.verify.DualEnvHarness) that
-the two produce identical greedy token streams.
+the two produce identical token streams, greedy AND sampled (counter-
+based per-request PRNG keys make sampled streams engine-independent).
 
 ``PagedServeEngine`` is the production path: a refcounted block allocator
 + hash-chained prefix cache (serve.paging) so overlapping prompts reuse KV
@@ -12,6 +19,11 @@ pages instead of recomputing them, chunked prefill (``decode_chunk``) so a
 long prompt consumes C tokens per step in the same batched call that
 advances decoding lanes by one, and a priority scheduler
 (serve.scheduler) with preemption-on-OOM and recompute-on-readmit.
+
+Sampling is fused into the jitted step (``models.decode.
+sample_from_logits``): the engines exchange only ``[B]`` token vectors
+with the device, and per-lane sampling state rides fixed-shape arrays —
+no shape polymorphism, no recompiles, no host-side logits traffic.
 """
 from __future__ import annotations
 
@@ -26,9 +38,12 @@ import numpy as np
 from repro.audit.trace import NULL_TRACER, Tracer
 from repro.models.decode import CompileWatcher
 from repro.models.model import Model
+from repro.serve.api import (GREEDY, LaneState, RequestHandle, SamplingParams,
+                             run_requests)
 from repro.serve.paging import (BlockAllocator, KVPool, PrefixCache,
                                 chain_hashes, pages_for)
-from repro.serve.scheduler import SchedEntry, Scheduler
+from repro.serve.scheduler import (DONE, PREEMPTED, RUNNING, WAITING, Plan,
+                                   SchedEntry, Scheduler)
 
 
 @dataclass
@@ -38,15 +53,33 @@ class Request:
     max_new: int = 32
     eos_id: int = -1            # -1: never stops early
     priority: int = 0           # higher preempts lower on OOM (paged path)
+    sampling: SamplingParams | None = None   # None => greedy
     out: list[int] = field(default_factory=list)
+    finished: bool = False
+    cancelled: bool = False
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
 
 
+def _validate(req: Request) -> None:
+    """Static request validation shared by both engines' ``submit``."""
+    if not req.prompt:
+        raise ValueError(f"request {req.rid}: empty prompt (decoding "
+                         f"needs at least one token of context)")
+    if not -2**31 <= req.rid < 2**31:
+        # the rid rides an int32 lane array into the jitted step
+        raise ValueError(f"request id {req.rid} does not fit int32")
+
+
+def _samples(req: Request) -> bool:
+    return not (req.sampling or GREEDY).greedy
+
+
 @dataclass
 class EngineStats:
     served: int = 0
+    cancelled: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
     batch_occupancy: list[int] = field(default_factory=list)
@@ -67,11 +100,23 @@ class ServeEngine:
         self.cache = cache
         self.pos = np.zeros((slots,), np.int32)       # next write position
         self.active: dict[int, Request] = {}          # slot -> request
+        self.pending: list[tuple[float, Request]] = []  # (arrival, req) FCFS
+        self.now = 0.0                                # step-counter clock
+        self.lane = LaneState(slots)
         self.stats = EngineStats()
         self.trace = tracer or NULL_TRACER
+        # two fused programs, dispatched per call on whether any lane in
+        # the batch actually samples: all-greedy serving (the default)
+        # never lowers the sampling pipeline and pays exactly the seed
+        # engine's cost; jax.jit is lazy, so the unused variant never
+        # compiles.  Distinct watcher names keep the per-program
+        # compile expectation (max 1) meaningful for both.
         self._decode = CompileWatcher(
-            jax.jit(model.decode_step, donate_argnums=(1,)), "decode_step",
-            on_compile=self._on_compile)
+            jax.jit(model.decode_greedy_step, donate_argnums=(1,)),
+            "decode_step", on_compile=self._on_compile)
+        self._decode_sample = CompileWatcher(
+            jax.jit(model.decode_sample_step, donate_argnums=(1,)),
+            "decode_sample_step", on_compile=self._on_compile)
         self._last_token = np.zeros((slots, 1), np.int32)
         self.trace.emit("engine-init", engine="contiguous",
                         family=model.cfg.family, arch=model.cfg.name,
@@ -80,97 +125,201 @@ class ServeEngine:
     def _on_compile(self, fn: str, reason: str, sig: tuple) -> None:
         self.trace.emit("compile", fn=fn, reason=reason, signature=sig)
 
-    # ------------------------------------------------------------ admit
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request, *, arrival: float | None = None
+               ) -> RequestHandle:
+        _validate(req)
+        arrival = self.now if arrival is None else arrival
+        req.t_submit = req.t_submit or time.perf_counter()
+        self.pending.append((arrival, req))
+        self.trace.emit("submit", rid=req.rid, tick=self.now,
+                        arrival=arrival, prompt_tokens=len(req.prompt),
+                        max_new=req.max_new,
+                        sampling=(req.sampling or GREEDY).describe())
+        return RequestHandle(self, req)
+
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.slots) if s not in self.active]
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _admit(self, req: Request, slot: int, arrival: float) -> None:
         """Prefill the prompt into this slot serially (single-slot prefill;
         a production engine would batch same-length prompts)."""
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt (decoding "
-                             f"needs at least one token of context)")
-        req.t_submit = req.t_submit or time.perf_counter()
         tokens = req.prompt[-(self.max_len - req.max_new):]
+        self.lane.set(slot, req)     # step=0: the first output token's key
         # step the prompt through decode one token at a time into the slot
-        # rows (slot-local prefill keeps the cache layout identical)
+        # rows (slot-local prefill keeps the cache layout identical; other
+        # lanes' rows are recomputed idempotently and their sampled tokens
+        # discarded — counter-based keys consume no stream state).  Only
+        # the final step's token is read, so only it needs the sampled
+        # program; every earlier step takes the cheap argmax variant
+        # (the cache updates are identical).
         for i, tok in enumerate(tokens):
             self._last_token[slot, 0] = tok
             self.pos[slot] = i
-            logits, self.cache = self._decode(
-                self.params, self.cache,
-                jnp.asarray(self._last_token), jnp.asarray(self.pos))
+            if _samples(req) and i == len(tokens) - 1:
+                toks, self.cache = self._decode_sample(
+                    self.params, self.cache,
+                    jnp.asarray(self._last_token), jnp.asarray(self.pos),
+                    self.lane.as_args())
+            else:
+                toks, self.cache = self._decode(
+                    self.params, self.cache,
+                    jnp.asarray(self._last_token), jnp.asarray(self.pos))
         self.pos[slot] = len(tokens)
-        nxt = int(jnp.argmax(logits[slot]))
+        nxt = int(np.asarray(toks)[slot])
         req.out.append(nxt)
         req.t_first = time.perf_counter()
         self._last_token[slot, 0] = nxt
         self.active[slot] = req
         self.trace.emit("admit", rid=req.rid, slot=slot,
                         prompt_tokens=len(tokens), cached_tokens=0)
+        self.trace.emit("first-token", rid=req.rid, tick=self.now,
+                        ttft_ticks=self.now - arrival)
 
-    # ------------------------------------------------------------- run
-    def run(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
+    def _retire(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        req.finished = True
+        req.t_done = time.perf_counter()
+        self.lane.clear(slot)
+        self.trace.emit("finish", rid=req.rid, slot=slot, tick=self.now,
+                        tokens_out=len(req.out))
+        self.stats.served += 1
+        return req
+
+    # -------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One engine tick: admit ready pending requests (strict FCFS)
+        into free slots, then one batched fused decode call (greedy or
+        sampled program, chosen by the batch's request mix)."""
+        self.now += 1.0
         done: list[Request] = []
-        while pending or self.active:
-            while pending and self._free_slots():
-                self._admit(pending.pop(0), self._free_slots()[0])
-
-            if not self.active:
+        # FCFS over *ready* requests, matching the paged scheduler's
+        # arrival semantics: a future-dated head must not block a ready
+        # request behind it (the two Engine implementations agree on
+        # out-of-order arrivals)
+        i = 0
+        while i < len(self.pending) and self._free_slots():
+            arrival, req = self.pending[i]
+            if arrival > self.now:
+                i += 1
                 continue
-            logits, self.cache = self._decode(
+            self.pending.pop(i)
+            slot = self._free_slots()[0]
+            self._admit(req, slot, arrival)
+            # the admission-produced first token can already satisfy the
+            # finish conditions (max_new=1, eos on first token): retire
+            # now, exactly like the paged engine does after prefill
+            tok = req.out[-1]
+            if (tok == req.eos_id or len(req.out) >= req.max_new
+                    or self.pos[slot] >= self.max_len - 1):
+                done.append(self._retire(slot))
+
+        if not self.active:
+            return done
+        if any(_samples(r) for r in self.active.values()):
+            for slot, req in self.active.items():
+                self.lane.set(slot, req)
+            toks, self.cache = self._decode_sample(
+                self.params, self.cache,
+                jnp.asarray(self._last_token), jnp.asarray(self.pos),
+                self.lane.as_args())
+        else:
+            toks, self.cache = self._decode(
                 self.params, self.cache,
                 jnp.asarray(self._last_token), jnp.asarray(self.pos))
-            self.stats.decode_steps += 1
-            self.stats.batch_occupancy.append(len(self.active))
-            self.trace.emit("step", step_kind="decode",
-                            lanes=len(self.active))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats.decode_steps += 1
+        self.stats.batch_occupancy.append(len(self.active))
+        self.trace.emit("step", step_kind="decode", lanes=len(self.active))
+        nxt = np.asarray(toks)
 
-            finished = []
-            for slot, req in self.active.items():
-                tok = int(nxt[slot])
-                req.out.append(tok)
-                self.stats.tokens_out += 1
-                self.pos[slot] += 1
-                self._last_token[slot, 0] = tok
-                if (tok == req.eos_id or len(req.out) >= req.max_new
-                        or self.pos[slot] >= self.max_len - 1):
-                    req.t_done = time.perf_counter()
-                    finished.append(slot)
-            for slot in finished:
-                req = self.active.pop(slot)
-                self.trace.emit("finish", rid=req.rid, slot=slot,
-                                tokens_out=len(req.out))
-                done.append(req)
-                self.stats.served += 1
+        finished = []
+        for slot, req in self.active.items():
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.stats.tokens_out += 1
+            self.pos[slot] += 1
+            self._last_token[slot, 0] = tok
+            if (tok == req.eos_id or len(req.out) >= req.max_new
+                    or self.pos[slot] >= self.max_len - 1):
+                finished.append(slot)
+        return done + [self._retire(slot) for slot in finished]
+
+    def drain(self) -> list[Request]:
+        done: list[Request] = []
+        while self.has_work():
+            done.extend(self.step())
         return done
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, handle: RequestHandle) -> bool:
+        req = handle.req
+        if req.finished or req.cancelled:
+            return False
+        phase = None
+        for i, (_, r) in enumerate(self.pending):
+            if r is req:
+                self.pending.pop(i)
+                phase = "waiting"
+                break
+        if phase is None:
+            for slot, r in list(self.active.items()):
+                if r is req:
+                    self.active.pop(slot)
+                    self.lane.clear(slot)
+                    phase = "decode"     # contiguous has no mid-prefill gap
+                    break
+        if phase is None:
+            return False
+        req.cancelled = True
+        req.t_done = time.perf_counter()
+        self.stats.cancelled += 1
+        self.trace.emit("cancel", rid=req.rid, phase=phase, tick=self.now,
+                        released_pages=0)
+        return True
+
+    # ---------------------------------------------------------- run shim
+    def run(self, requests: list[Request],
+            arrivals: list[float] | None = None) -> list[Request]:
+        return run_requests(self, requests, arrivals)
 
     # -------------------------------------------------------------- report
     def report(self) -> dict:
         return {
             "engine": "contiguous",
             "served": self.stats.served,
+            "cancelled": self.stats.cancelled,
             "decode_steps": self.stats.decode_steps,
             "tokens_out": self.stats.tokens_out,
             "mean_batch_occupancy": round(self.stats.mean_occupancy, 2),
-            "compiles": self._decode.compiles,
+            # worst per-program count: each fused variant (greedy /
+            # sampled) should compile at most once; a genuine hot-loop
+            # recompile shows up as > 1 on a single watcher
+            "compiles": max(self._decode.compiles,
+                            self._decode_sample.compiles),
         }
 
 
 # ================================================================== paged
 
 
-def _chunk_fn_for(model: Model):
-    """One jitted chunk step per Model instance, shared by every engine
-    built on it (benchmark sweeps construct many engines; recompiling per
-    engine would dominate wall time).  Cached on the model itself so its
-    lifetime — and the compiled executables' — ends with the model."""
-    fn = getattr(model, "_chunk_jit", None)
+def _chunk_fn_for(model: Model, sampled: bool):
+    """One jitted chunk step per (Model instance, variant), shared by
+    every engine built on it (benchmark sweeps construct many engines;
+    recompiling per engine would dominate wall time).  Cached on the
+    model itself so its lifetime — and the compiled executables' — ends
+    with the model.  Two variants: fused argmax for all-greedy batches
+    (the sampling pipeline never lowers) and fused sampling; jax.jit is
+    lazy, so an unused variant never compiles."""
+    attr = "_chunk_sample_jit" if sampled else "_chunk_greedy_jit"
+    fn = getattr(model, attr, None)
     if fn is None:
-        fn = jax.jit(model.decode_chunk, donate_argnums=(1,))
-        model._chunk_jit = fn
+        target = (model.decode_sample_chunk if sampled
+                  else model.decode_greedy_chunk)
+        fn = jax.jit(target, donate_argnums=(1,))
+        setattr(model, attr, fn)
     return fn
 
 
@@ -204,26 +353,36 @@ class _Slot:
 class PagedServeEngine:
     """Paged-KV continuous batching: prefix reuse + chunked prefill.
 
-    Every step is one fixed-shape ``decode_chunk`` call: prefill lanes
-    feed up to ``chunk`` prompt tokens, decode lanes feed their last
+    Every step is one fixed-shape ``decode_sample_chunk`` call: prefill
+    lanes feed up to ``chunk`` prompt tokens, decode lanes feed their last
     sampled token, idle lanes feed nothing (n_new=0).  The dense per-slot
     cache remains the jitted working set; the page pool holds registered
     prefix KV that admissions copy in instead of recomputing.
 
     Deterministic by construction: the scheduler runs on the engine's
     synthetic tick clock, so a trace (prompts, priorities, arrivals)
-    replays to the same schedule and the same token streams.
+    replays to the same schedule and the same token streams — greedy and
+    sampled alike, because sampled tokens key on (seed, rid, step), not
+    on slots or schedule.
+
+    ``admit_every`` batches scheduler invocations to every N-th tick
+    (N=1, the default, schedules every tick).  Values > 1 model a
+    misconfigured admission interval: output streams are unchanged but
+    TTFT inflates — the audit's per-request latency expectations exist to
+    catch exactly this class.
     """
 
     def __init__(self, model: Model, params: Any, *, slots: int = 4,
                  max_len: int = 256, block_size: int = 16,
                  num_blocks: int | None = None, chunk: int = 8,
                  tick_dt: float = 1.0, use_prefix_cache: bool = True,
-                 tracer: Tracer | None = None):
+                 admit_every: int = 1, tracer: Tracer | None = None):
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine needs an attention cache (dense/moe); "
                 f"{model.cfg.family!r} serves through ServeEngine")
+        if admit_every < 1:
+            raise ValueError(f"admit_every must be >= 1, got {admit_every}")
         self.model = model
         self.params = params
         self.slots = slots
@@ -240,6 +399,9 @@ class PagedServeEngine:
         self.pool = KVPool(num_blocks, block_size, layers, n_kv, hd, k.dtype)
         self.now = 0.0
         self.tick_dt = tick_dt
+        self.admit_every = admit_every
+        self._ticks = 0
+        self.lane = LaneState(slots)
         # engine events carry ``tick`` (the synthetic clock) in their
         # payload rather than rebinding the caller-owned tracer's clock:
         # replayed traces (same prompts, priorities, arrivals) still
@@ -252,34 +414,46 @@ class PagedServeEngine:
         self.stats = EngineStats()
         self.pstats = PagedStats()
         self.ttft_ticks: list[float] = []   # first-token latency, tick clock
+        def _on_compile(fn, reason, sig):
+            self.trace.emit("compile", fn=fn, reason=reason, signature=sig)
+
         self._chunk_fn = CompileWatcher(
-            _chunk_fn_for(model), "decode_chunk",
-            on_compile=lambda fn, reason, sig: self.trace.emit(
-                "compile", fn=fn, reason=reason, signature=sig))
+            _chunk_fn_for(model, sampled=False), "decode_chunk",
+            on_compile=_on_compile)
+        self._chunk_sample_fn = CompileWatcher(
+            _chunk_fn_for(model, sampled=True), "decode_sample_chunk",
+            on_compile=_on_compile)
         self.trace.emit("engine-init", engine="paged",
                         family=model.cfg.family, arch=model.cfg.name,
                         slots=slots, max_len=max_len, block_size=block_size,
                         chunk=chunk, pages=num_blocks,
-                        prefix_cache=use_prefix_cache)
+                        prefix_cache=use_prefix_cache,
+                        admit_every=admit_every)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request, *, arrival: float | None = None
-               ) -> SchedEntry:
+               ) -> RequestHandle:
         # reject statically-unplaceable requests here, where only the bad
         # request fails — once queued, it would starve everything behind
         # it (strict head-of-line) without ever becoming admissible
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt (decoding "
-                             f"needs at least one token of context)")
+        _validate(req)
         worst = pages_for(len(self._feed_of(req)) + req.max_new,
                           self.alloc.block_size)
         if worst > self.alloc.num_blocks:
             raise ValueError(
                 f"request {req.rid} needs {worst} pages even fully "
                 f"recomputed; pool has {self.alloc.num_blocks}")
-        return self.sched.submit(
-            req, priority=req.priority,
-            arrival=self.now if arrival is None else arrival)
+        arrival = self.now if arrival is None else arrival
+        req.t_submit = req.t_submit or time.perf_counter()
+        entry = self.sched.submit(req, priority=req.priority, arrival=arrival)
+        self.trace.emit("submit", rid=req.rid, tick=self.now,
+                        arrival=arrival, prompt_tokens=len(req.prompt),
+                        max_new=req.max_new,
+                        sampling=(req.sampling or GREEDY).describe())
+        return RequestHandle(self, req, entry)
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.slots) if s not in self.active]
@@ -301,7 +475,6 @@ class PagedServeEngine:
     # ------------------------------------------------------------- admit
     def _admit(self, entry: SchedEntry, slot: int) -> bool:
         req: Request = entry.req
-        req.t_submit = req.t_submit or time.perf_counter()
         bs = self.alloc.block_size
         feed = self._feed_of(req)
         total = pages_for(len(feed) + req.max_new - len(req.out), bs)
@@ -370,6 +543,7 @@ class PagedServeEngine:
 
     def _preempt(self, entry: SchedEntry) -> None:
         st = self.active.pop(entry.slot)
+        self.lane.clear(entry.slot)
         self.trace.emit("preempt", rid=st.req.rid, slot=entry.slot,
                         tick=self.now, consumed=st.consumed,
                         released_pages=len(st.shared) + len(st.private))
@@ -378,6 +552,9 @@ class PagedServeEngine:
 
     def _finish(self, slot: int) -> Request:
         st = self.active.pop(slot)
+        self.lane.clear(slot)
+        st.req.finished = True
+        st.req.t_done = time.perf_counter()
         self.trace.emit("finish", rid=st.req.rid, slot=slot, tick=self.now,
                         tokens_out=len(st.req.out))
         self._release(st)
@@ -385,25 +562,62 @@ class PagedServeEngine:
         self.stats.served += 1
         return st.req
 
-    # --------------------------------------------------------------- tick
-    def _tick(self) -> list[Request]:
+    # ------------------------------------------------------------ cancel
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel at any lifecycle stage.  Mid-prefill / mid-decode the
+        slot is freed and every page reference the request held (shared
+        prefix refs + private pages) is released; blocks it registered in
+        the prefix cache survive through the cache's own reference."""
+        entry: SchedEntry = handle.entry
+        req = handle.req
+        if entry is None or entry.state == DONE or req.cancelled:
+            return False
+        if entry.state == RUNNING:
+            st = self.active.pop(entry.slot)
+            self.lane.clear(entry.slot)
+            phase = "prefill" if st.pending else "decode"
+            released = len(st.shared) + len(st.private)
+            self._release(st)
+            self.sched.mark_cancelled(entry)
+        elif entry.state in (WAITING, PREEMPTED):
+            phase, released = "waiting", 0
+            self.sched.mark_cancelled(entry)
+        else:
+            return False
+        req.cancelled = True
+        req.t_done = time.perf_counter()
+        self.stats.cancelled += 1
+        self.trace.emit("cancel", rid=req.rid, phase=phase, tick=self.now,
+                        released_pages=released)
+        return True
+
+    # --------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One engine tick: scheduler plan (every ``admit_every``-th
+        tick), then one fused chunked decode+sample call."""
         self.now += self.tick_dt
-        plan = self.sched.schedule(
-            free_slots=len(self._free_slots()),
-            free_pages=self.alloc.num_free + self.prefix.evictable(),
-            cost_fn=self._cost)
-        for victim in plan.preempt:
-            self._preempt(victim)
+        self._ticks += 1
+        run_sched = (self._ticks - 1) % self.admit_every == 0
         admitted = 0
-        for entry in plan.admit:
-            free = self._free_slots()
-            if not free:
-                break
-            if not self._admit(entry, free[0]):
-                break   # intra-tick race: keep strict head-of-line order
-            admitted += 1
+        if run_sched:
+            plan = self.sched.schedule(
+                free_slots=len(self._free_slots()),
+                free_pages=self.alloc.num_free + self.prefix.evictable(),
+                cost_fn=self._cost)
+            for victim in plan.preempt:
+                self._preempt(victim)
+            for entry in plan.admit:
+                free = self._free_slots()
+                if not free:
+                    break
+                if not self._admit(entry, free[0]):
+                    break   # intra-tick race: keep strict head-of-line order
+                admitted += 1
+        else:
+            plan = Plan()
         if not self.active:
-            if (admitted == 0 and not plan.preempt and self.sched.waiting
+            if (run_sched and admitted == 0 and not plan.preempt
+                    and self.sched.waiting
                     and all(e.arrival <= self.now
                             for e in self.sched.waiting)):
                 raise RuntimeError(
@@ -415,8 +629,11 @@ class PagedServeEngine:
         toks = np.zeros((self.slots, self.chunk), np.int32)
         pos = np.zeros((self.slots,), np.int32)
         n_new = np.zeros((self.slots,), np.int32)
+        need_sample = any(_samples(st.req) for st in self.active.values())
         for slot, st in self.active.items():
             pos[slot] = st.consumed
+            if need_sample:          # greedy program never reads the lanes
+                self.lane.set(slot, st.req)
             if st.pending:
                 n = min(self.chunk, len(st.pending))
                 toks[slot, :n] = st.pending[:n]
@@ -425,9 +642,14 @@ class PagedServeEngine:
                 toks[slot, 0] = st.next_input
                 n_new[slot] = 1
 
-        logits, self.cache = self._chunk_fn(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(n_new))
+        if need_sample:
+            sampled, self.cache = self._chunk_sample_fn(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(n_new), self.lane.as_args())
+        else:
+            sampled, self.cache = self._chunk_fn(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(n_new))
         self.stats.decode_steps += 1
         self.stats.batch_occupancy.append(len(self.active))
         if self.trace.enabled:       # keep the untraced tick allocation-free
@@ -440,7 +662,7 @@ class PagedServeEngine:
                 prefill_lanes=sum(1 for _, p in lanes if p),
                 decode_lanes=sum(1 for _, p in lanes if not p),
                 chunk_sizes=tuple(n for n, _ in lanes))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(sampled)
 
         finished: list[int] = []
         for slot, st in self.active.items():
@@ -451,35 +673,39 @@ class PagedServeEngine:
                 self.pstats.prefill_tokens += n
                 self._register_blocks(slot, st)
                 if st.pending:
-                    continue        # mid-prefill: this lane's logits unused
+                    continue        # mid-prefill: this lane's sample unused
             tok = int(nxt[slot])
             req.out.append(tok)
             self.stats.tokens_out += 1
             if not req.t_first:
-                self.ttft_ticks.append(self.now - st.entry.arrival)
+                ttft = self.now - st.entry.arrival
+                self.ttft_ticks.append(ttft)
                 req.t_first = time.perf_counter()
+                self.trace.emit("first-token", rid=req.rid, tick=self.now,
+                                ttft_ticks=ttft)
             st.next_input = tok
             if (tok == req.eos_id or len(req.out) >= req.max_new
                     or st.consumed >= self.max_len - 1):
-                req.t_done = time.perf_counter()
                 finished.append(slot)
         return [self._finish(slot) for slot in finished]
 
-    # ---------------------------------------------------------------- run
+    def drain(self) -> list[Request]:
+        done: list[Request] = []
+        while self.has_work():
+            done.extend(self.step())
+        return done
+
+    # ---------------------------------------------------------- run shim
     def run(self, requests: list[Request],
             arrivals: list[float] | None = None) -> list[Request]:
-        for i, req in enumerate(requests):
-            self.submit(req, arrival=arrivals[i] if arrivals else None)
-        done: list[Request] = []
-        while self.sched.has_work():
-            done.extend(self._tick())
-        return done
+        return run_requests(self, requests, arrivals)
 
     # -------------------------------------------------------------- report
     def report(self) -> dict:
         return {
             "engine": "paged",
             "served": self.stats.served,
+            "cancelled": self.stats.cancelled,
             "decode_steps": self.stats.decode_steps,
             "tokens_out": self.stats.tokens_out,
             "mean_batch_occupancy": round(self.stats.mean_occupancy, 2),
@@ -492,8 +718,12 @@ class PagedServeEngine:
             "block_size": self.alloc.block_size,
             "chunk": self.chunk,
             "prefix_cache": self.prefix_enabled,
+            "admit_every": self.admit_every,
             "preemptions": self.sched.stats.preemptions,
-            "compiles": self._chunk_fn.compiles,
+            # worst per-program count (greedy / sampled variants each
+            # bound at one compile; see ServeEngine.report)
+            "compiles": max(self._chunk_fn.compiles,
+                            self._chunk_sample_fn.compiles),
         }
 
 
@@ -502,8 +732,8 @@ class PagedServeEngine:
 
 def token_matrix(done: list[Request], n_requests: int,
                  max_new: int) -> np.ndarray:
-    """Greedy output streams as a dense int matrix (pad = -1), rid-ordered
-    so completion order does not affect the comparison."""
+    """Output streams as a dense int matrix (pad = -1), rid-ordered so
+    completion order does not affect the comparison."""
     out = np.full((n_requests, max_new), -1, np.int64)
     for r in done:
         out[r.rid, :len(r.out)] = r.out
@@ -513,24 +743,35 @@ def token_matrix(done: list[Request], n_requests: int,
 def compare_engines(model: Model, params: Any,
                     make_requests: Callable[[], list[Request]], *,
                     slots: int = 2, max_len: int = 64, block_size: int = 8,
-                    chunk: int = 4, repeats: int = 1):
+                    chunk: int = 4, repeats: int = 1,
+                    sampling: SamplingParams | None = None):
     """The paged engine's correctness proof, in the paper's methodology:
     the same workload under two environments (contiguous oracle vs paged)
-    must agree token-for-token.  Returns a core.verify.DualEnvReport whose
+    must agree token-for-token.  With ``sampling`` given, both engines
+    decode the workload under those SamplingParams — counter-based keys
+    make sampled streams engine-independent, so the verdict is the same
+    bit-identity as greedy.  Returns a core.verify.DualEnvReport whose
     verdicts CI gates on."""
     from repro.core.verify import DualEnvHarness
 
-    probe = make_requests()
+    def requests() -> list[Request]:
+        reqs = make_requests()
+        if sampling is not None:
+            for r in reqs:
+                r.sampling = sampling
+        return reqs
+
+    probe = requests()
     n, max_new = len(probe), max(r.max_new for r in probe)
 
     def run_contiguous():
         eng = ServeEngine(model, params, slots=slots, max_len=max_len)
-        return token_matrix(eng.run(make_requests()), n, max_new)
+        return token_matrix(eng.run(requests()), n, max_new)
 
     def run_paged():
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                block_size=block_size, chunk=chunk)
-        return token_matrix(eng.run(make_requests()), n, max_new)
+        return token_matrix(eng.run(requests()), n, max_new)
 
     harness = DualEnvHarness(repeats=repeats, warmup=0)
     return harness.compare("contiguous", run_contiguous,

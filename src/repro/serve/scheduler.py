@@ -34,6 +34,7 @@ WAITING = "waiting"
 RUNNING = "running"
 PREEMPTED = "preempted"
 DONE = "done"
+CANCELLED = "cancelled"
 
 
 @dataclass
@@ -60,6 +61,7 @@ class SchedStats:
     admissions: int = 0
     preemptions: int = 0
     readmissions: int = 0
+    cancellations: int = 0
 
 
 class Scheduler:
@@ -156,3 +158,19 @@ class Scheduler:
         self.running.remove(e)
         e.state, e.slot, e.held_pages = DONE, None, 0
         self.trace.emit("sched-done", seq=e.seq, priority=e.priority)
+
+    def mark_cancelled(self, e: SchedEntry) -> None:
+        """Drop an entry at any pre-DONE stage.  The engine releases the
+        slot and pages before calling this; the scheduler just forgets the
+        entry (a cancelled entry never re-enters the waiting queue)."""
+        if e.state == RUNNING:
+            self.running.remove(e)
+        elif e.state in (WAITING, PREEMPTED):
+            self.waiting.remove(e)
+        else:
+            raise ValueError(f"cannot cancel entry in state {e.state!r}")
+        was = e.state
+        e.state, e.slot, e.held_pages = CANCELLED, None, 0
+        self.stats.cancellations += 1
+        self.trace.emit("sched-cancel", seq=e.seq, priority=e.priority,
+                        was=was)
