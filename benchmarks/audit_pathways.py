@@ -2,7 +2,7 @@
 
 ``compare_engines`` proves two serving pathways emit identical token
 streams (greedy and sampled) — it is blind to *how* they got there.
-This benchmark seeds four misconfigurations that keep outputs
+This benchmark seeds five misconfigurations that keep outputs
 token-identical while degrading the pathway (the paper's "suboptimal
 transport pathway" class, §8), and asserts the audit pipeline flags each
 as an error:
@@ -15,7 +15,12 @@ as an error:
   4. slow admission (scheduler only consulted every N-th tick): streams
      are unchanged but per-request TTFT inflates — caught by the
      registry's per-request latency expectations over the lifecycle
-     trace events (submit / first-token / finish).
+     trace events (submit / first-token / finish);
+  5. gather fallback on the paged engine (``kernel="gather"``): KV
+     copied into a dense per-slot working cache at admission instead of
+     attended through the device page table — the contiguous-shaped
+     detour the paged-attention kernel exists to remove, flagged
+     ``pathway-kernel``.
 
 A request-lifecycle probe additionally runs sampled + cancelled requests
 through the audited pathway and gates on their events being visible in
@@ -57,6 +62,7 @@ except ImportError:  # pragma: no cover - script path
 #: What each seeded misconfiguration must trip in the registry.
 SEEDS = {
     "contiguous-fallback": "pathway-engine-selection",
+    "gather-fallback": "pathway-kernel",
     "shrunk-page-size": "pathway-page-geometry",
     "disabled-prefix-cache": "pathway-prefix-cache",
     "slow-admission": "pathway-ttft",
@@ -153,6 +159,11 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
         return ServeEngine(model, params, slots=slots, max_len=max_len,
                            tracer=tracer)
 
+    def gather_fallback(tracer):
+        return PagedServeEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=block, chunk=chunk,
+                                kernel="gather", tracer=tracer)
+
     def shrunk_page(tracer):
         return PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                 block_size=2, chunk=chunk, tracer=tracer)
@@ -168,6 +179,7 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
                                 admit_every=ADMIT_EVERY, tracer=tracer)
 
     builders = {"contiguous-fallback": contiguous_fallback,
+                "gather-fallback": gather_fallback,
                 "shrunk-page-size": shrunk_page,
                 "disabled-prefix-cache": no_prefix_cache,
                 "slow-admission": slow_admission}

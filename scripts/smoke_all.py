@@ -128,7 +128,8 @@ def main() -> int:
         "serve_throughput": {
             k: serve_rec[k] for k in
             ("speedup", "oracle_ok", "contiguous_tokens_per_s",
-             "paged_tokens_per_s")},
+             "paged_tokens_per_s", "kernel_parity_ok",
+             "kernel_vs_gather_speedup")},
         "audit_pathways": {
             "oracle_ok": audit_rec["oracle_ok"],
             "detected_all": audit_rec["detected_all"],
@@ -158,7 +159,9 @@ def main() -> int:
         print(diag.render())
         print(f"OK serve_throughput        speedup={serve_rec['speedup']}x "
               f"oracle_ok={serve_rec['oracle_ok']} "
-              f"hit_rate={serve_rec['paged']['prefix_hit_rate']}")
+              f"hit_rate={serve_rec['paged']['prefix_hit_rate']} "
+              f"kernel_parity={serve_rec['kernel_parity_ok']} "
+              f"kernel_vs_gather={serve_rec['kernel_vs_gather_speedup']}x")
         print(f"OK audit_pathways          "
               f"detected_all={audit_rec['detected_all']} "
               f"oracle_ok={audit_rec['oracle_ok']}")

@@ -134,8 +134,11 @@ class Evidence:
                 counts[fn] = counts.get(fn, 0) + 1
         rep = self.engine_report or {}
         if isinstance(rep.get("compiles"), int):
-            fn = ("decode_chunk" if rep.get("engine") == "paged"
-                  else "decode_step")
+            if rep.get("engine") == "paged":
+                fn = ("decode_paged_chunk" if rep.get("kernel") == "paged"
+                      else "decode_chunk")
+            else:
+                fn = "decode_step"
             counts[fn] = max(counts.get(fn, 0), rep["compiles"])
         return counts
 
@@ -146,6 +149,10 @@ class ExpectedSignature:
     ``None`` fields are unchecked."""
 
     engine: str | None = None               # "paged" | "contiguous"
+    kernel: str | None = None               # paged engine KV pathway:
+                                            # "paged" (through the page
+                                            # table) | "gather" (dense
+                                            # working-cache fallback)
     min_block_size: int | None = None       # page geometry floor
     min_prefix_hit_rate: float | None = None  # gated on ctx.shared_prefix
     max_compiles_per_fn: int | None = None  # steady state: 1 per program
@@ -227,6 +234,18 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                 f"degraded transport pathway)"))
 
     init = ev.engine_init()
+    if sig.kernel is not None and init is not None:
+        kern = init.get("kernel")
+        # absent on contiguous evidence (the engine-selection check above
+        # already covers that class); judged only where the field exists
+        if kern is not None and kern != sig.kernel:
+            out.append(_find(
+                rule, "pathway-kernel",
+                f"paged serving attends KV via the {kern!r} pathway; "
+                f"expected {sig.kernel!r} — the dense per-slot gather "
+                f"keeps token streams identical while reintroducing the "
+                f"contiguous-shaped copy the page-table kernel removes"))
+
     if sig.min_block_size is not None and init is not None:
         bs = init.get("block_size")
         if bs is not None and bs < sig.min_block_size:
@@ -317,15 +336,18 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
 
 # ===================================================== default expectations
 
-#: Serving on attention-cache families must take the paged path with sane
-#: page geometry, an effective prefix cache on shared-prefix traces, and
-#: exactly one compile per jitted program (fixed shapes).
+#: Serving on attention-cache families must take the paged path — engine
+#: AND kernel: KV attended through the device page table, not gathered
+#: into a dense per-slot working cache — with sane page geometry, an
+#: effective prefix cache on shared-prefix traces, and exactly one
+#: compile per jitted program (fixed shapes).
 _SERVE_PAGED = Rule(
     name="serve-dense-paged",
     families=("dense", "moe"),
     workloads=("serve", "bench"),
     expect=ExpectedSignature(
         engine="paged",
+        kernel="paged",
         min_block_size=4,
         min_prefix_hit_rate=0.05,
         max_compiles_per_fn=1,

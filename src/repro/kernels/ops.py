@@ -14,11 +14,31 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hh_neuron import hh_step_pallas
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_attention_ref)
 from repro.kernels.ssd_scan import ssd_scan_pallas
+
+#: Force interpret mode regardless of backend (tests/conftest.py sets
+#: this off-accelerator so tier-1 exercises the kernel bodies on CPU CI
+#: even if the backend probe ever reports something exotic).
+FORCE_INTERPRET = False
+
+#: Force the Pallas paged-attention kernel onto the serving hot path even
+#: off-accelerator (it then runs in interpret mode).  Tests use this to
+#: drive the kernel through the full engine on CPU; production CPU
+#: serving takes the pure-JAX page-table reference instead — same paged
+#: pathway, bit-comparable to the contiguous oracle.
+FORCE_PAGED_KERNEL = False
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return FORCE_INTERPRET or jax.default_backend() != "tpu"
+
+
+def use_paged_kernel() -> bool:
+    """Whether the serving engine's paged path lowers the Pallas kernel
+    (TPU, or forced for tests) vs the pure-JAX page-table reference."""
+    return FORCE_PAGED_KERNEL or jax.default_backend() == "tpu"
 
 
 def hh_step(v0, m, h, n, g_syn, i_axial, dt, i_ext):
@@ -36,3 +56,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
 def ssd_scan(x, dt, a, b_in, c_in, chunk: int):
     return ssd_scan_pallas(x, dt, a, b_in, c_in, chunk,
                            interpret=_interpret())
+
+
+def paged_attention(q, k_pool, v_pool, page_table, pos, n_new):
+    """Decode/chunk attention through the device page table (the paged
+    serving engine's hot path).  TPU: native Mosaic; CPU: interpret mode
+    (the validation pathway this container supports)."""
+    return paged_attention_pallas(q, k_pool, v_pool, page_table, pos, n_new,
+                                  interpret=_interpret())

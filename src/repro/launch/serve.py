@@ -36,7 +36,8 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           max_len: int = 96, max_new: int = 16, seed: int = 0,
           engine: str = "paged", block_size: int = 8,
           chunk: int = 4, shared_prefix: int = 0,
-          use_prefix_cache: bool = True, audit: bool = True,
+          use_prefix_cache: bool = True, kernel: str = "paged",
+          audit: bool = True,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0) -> dict:
     cfg = reduced(resolve_arch(arch))
@@ -58,7 +59,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                block_size=block_size, chunk=chunk,
                                use_prefix_cache=use_prefix_cache,
-                               tracer=tracer)
+                               kernel=kernel, tracer=tracer)
     else:
         eng = ServeEngine(model, params, slots=slots, max_len=max_len,
                           tracer=tracer)
@@ -95,7 +96,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         rep = eng.report()
         out.update({k: rep[k] for k in
                     ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
-                     "page_peak_utilization", "preemptions")})
+                     "page_peak_utilization", "preemptions", "kernel")})
     if run_audit is not None:
         lat = Evidence(tracer=run_audit.tracer).request_latencies()
         if lat:
@@ -133,6 +134,12 @@ def main() -> None:
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus bound in (0, 1]")
     ap.add_argument("--sampling-seed", type=int, default=0)
+    ap.add_argument("--kernel", choices=["paged", "gather"], default="paged",
+                    help="paged-engine KV pathway: attend through the "
+                         "device page table (default) or fall back to the "
+                         "dense working-cache gather — the latter exists "
+                         "so operators can watch the pathway-kernel "
+                         "detector fire")
     ap.add_argument("--no-prefix-cache", dest="use_prefix_cache",
                     action="store_false",
                     help="disable prefix-KV reuse (the audit flags this "
@@ -145,7 +152,8 @@ def main() -> None:
                 max_new=args.max_new, engine=args.engine,
                 block_size=args.block_size, chunk=args.chunk,
                 shared_prefix=args.shared_prefix,
-                use_prefix_cache=args.use_prefix_cache, audit=args.audit,
+                use_prefix_cache=args.use_prefix_cache, kernel=args.kernel,
+                audit=args.audit,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, sampling_seed=args.sampling_seed)
     print(json.dumps(res, indent=1))

@@ -233,8 +233,13 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
     scores = jnp.einsum("bkgh,bskh->bkgs", q4, k_cache,
                         preferred_element_type=jnp.float32) * (hd ** -0.5)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    # fp32 softmax weights, one rounding after the PV product: the same
+    # accumulation discipline as the Pallas paged kernel, so every decode
+    # pathway (single-token, chunked, paged) rounds at the same points
+    # and token streams stay bit-comparable across engines
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs,
+                     v_cache.astype(jnp.float32)).astype(x.dtype)
     out = out.reshape(b, 1, kv * g * hd)
     out = constrain(out, ("act_batch", None, "act_heads"))
     y = out @ p["wo"]
@@ -286,10 +291,83 @@ def chunk_decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
                         preferred_element_type=jnp.float32) * (hd ** -0.5)
     valid = jnp.arange(s_max)[None, None, :] <= idx[:, :, None]  # [B,C,S]
     scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgcs,bskh->bckgh", probs, v_cache)
+    # fp32 weights, round once after PV — see decode_attention
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcs,bskh->bckgh", probs,
+                     v_cache.astype(jnp.float32)).astype(x.dtype)
     out = out.reshape(b, c, kv * g * hd)
     out = constrain(out, ("act_batch", None, "act_heads"))
     y = out @ p["wo"]
     y = constrain(y, ("act_batch", None, None))
     return y, k_cache, v_cache
+
+
+def paged_chunk_decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                                 k_pool: jax.Array, v_pool: jax.Array,
+                                 page_table: jax.Array, pos: jax.Array,
+                                 n_new: jax.Array):
+    """Chunked decode directly over the paged KV pool — no dense per-slot
+    working cache, no gather.
+
+    x [B,C,D]; k/v_pool [num_blocks, block_size, KV, hd] (one layer of
+    the shared device page pool); page_table [B, n_pages] int32 maps each
+    lane's logical block index to its physical page; pos/n_new as in
+    :func:`chunk_decode_attention`.
+
+    Fresh K/V rows are scattered into the pool *through the page table*
+    (each lane writes only its own private pages — shared, refcounted
+    prefix pages are never a write target because writes start at
+    ``pos >= matched_len`` and prefix matches are whole blocks), then
+    attention reads every page via the Pallas kernel
+    (``kernels.ops.paged_attention``; interpret mode off-accelerator).
+    Under tensor parallelism the pure-JAX page-table reference lowers
+    instead — still the paged pathway, just GSPMD-traceable.
+
+    Returns (y [B,C,D], new_k_pool, new_v_pool).
+    """
+    geom = head_geom(cfg, tp_size())
+    hd, kv, g = geom.head_dim, geom.n_kv, geom.group
+    b, c, _ = x.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    n_pages = page_table.shape[1]
+
+    q = (x @ p["wq"]).reshape(b, c, kv, g, hd)
+    k_new = (x @ p["wk"]).reshape(b, c, kv, hd)
+    v_new = (x @ p["wv"]).reshape(b, c, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_scale"], q, cfg.norm_eps)
+        k_new = rmsnorm(p["k_scale"], k_new, cfg.norm_eps)
+    idx = pos[:, None] + jnp.arange(c)[None, :]            # [B,C]
+    if cfg.rope_theta > 0:
+        qf = q.reshape(b, c, kv * g, hd)
+        q = rope(qf, idx, cfg.rope_theta).reshape(b, c, kv, g, hd)
+        k_new = rope(k_new, idx, cfg.rope_theta)
+
+    # masked scatter through the page table: row idx lands in physical
+    # page ``table[idx // bs]`` at offset ``idx % bs``.  Lanes write only
+    # their first n_new rows; anything out of range (idle slots, padding
+    # rows, idx beyond the table) resolves to page ``nb`` and drops.
+    ok = (jnp.arange(c)[None, :] < n_new[:, None]) & (idx < n_pages * bs)
+    blk = jnp.clip(idx // bs, 0, n_pages - 1)
+    page = jnp.take_along_axis(page_table, blk, axis=1)    # [B,C]
+    page = jnp.where(ok, page, nb)
+    off = idx % bs
+    k_pool = k_pool.at[page, off].set(k_new, mode="drop")
+    v_pool = v_pool.at[page, off].set(v_new, mode="drop")
+
+    from repro.kernels import ops as kops
+    if kops.use_paged_kernel() and tp_size() == 1:
+        out = kops.paged_attention(q, k_pool, v_pool, page_table, pos, n_new)
+    else:
+        # pure-JAX page-table reference: the same paged pathway (no dense
+        # working cache anywhere) with the dense path's exact rounding
+        # points, so CPU serving stays bit-comparable to the contiguous
+        # oracle; the Pallas kernel's online-softmax accumulation is
+        # held to the ref by the kernel-parity suite instead
+        from repro.kernels.paged_attention import paged_attention_ref
+        out = paged_attention_ref(q, k_pool, v_pool, page_table, pos, n_new)
+    out = out.reshape(b, c, kv * g * hd)
+    out = constrain(out, ("act_batch", None, "act_heads"))
+    y = out @ p["wo"]
+    y = constrain(y, ("act_batch", None, None))
+    return y, k_pool, v_pool

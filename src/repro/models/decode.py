@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import params as P
 from repro.models.attention import (chunk_decode_attention, decode_attention,
-                                    full_attention, tp_size)
+                                    full_attention,
+                                    paged_chunk_decode_attention, tp_size)
 from repro.models.layers import (embed_tokens, gelu_mlp, head_geom,
                                  logits_from, rmsnorm, sinusoidal_positions,
                                  swiglu)
@@ -525,6 +526,71 @@ def decode_chunk(cfg: ModelConfig, params: dict, cache: dict,
     x_last = rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
     logits = logits_from(params["embed"], cfg, x_last)[:, 0]
     return logits, {"self": {"k": ks, "v": vs}}
+
+
+# ======================================================= paged chunked decode
+
+
+def paged_cache_specs(cfg: ModelConfig, num_blocks: int,
+                      block_size: int) -> dict[str, Any]:
+    """Cache ParamSpec tree for the paged decode step: the KV lives in a
+    shared page pool ``(layers, num_blocks, block_size, kv, hd)`` instead
+    of dense per-slot rows.  Dense/moe only (attention caches)."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged cache supports dense/moe, got {cfg.family}")
+    geom = head_geom(cfg, tp_size())
+    shape = (cfg.n_layers, num_blocks, block_size, geom.n_kv, geom.head_dim)
+    axes = ("layers", None, None, "cache_kv", None)
+    return {"paged": {
+        "k": P.ParamSpec(shape, axes, init="zeros"),
+        "v": P.ParamSpec(shape, axes, init="zeros"),
+    }}
+
+
+def decode_paged_chunk(cfg: ModelConfig, params: dict, cache: dict,
+                       tokens: jax.Array, pos: jax.Array, n_new: jax.Array,
+                       page_table: jax.Array):
+    """C-token decode straight over the paged KV pool: the kernel-enabled
+    serving engine's single step.
+
+    Same contract as :func:`decode_chunk` (tokens [B,C], pos [B], n_new
+    [B]; logits at each lane's last real position) except the cache is
+    ``{"paged": {"k", "v"}}`` — the shared page pool — and ``page_table``
+    [B, n_pages] int32 maps each lane's logical blocks to physical
+    pages.  Fresh KV rows are written through the table and attention
+    reads through it (``kernels.paged_attention``): no dense per-slot
+    working cache exists anywhere on this path.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise ValueError(f"decode_paged_chunk supports dense/moe, got {fam}")
+    b = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        p, i = xs
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, kp_i, vp_i = paged_chunk_decode_attention(
+            cfg, p["attn"], h, _idx(kp, i), _idx(vp, i),
+            page_table, pos, n_new)
+        x = x + a
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if fam == "moe":
+            y, _ = moe_ffn(cfg, p["moe"], h2)
+        else:
+            y = swiglu(p["mlp"], h2)
+        return (x + y, _upd(kp, kp_i, i), _upd(vp, vp_i, i)), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["paged"]["k"], cache["paged"]["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+
+    last = jnp.maximum(n_new, 1) - 1
+    x_last = x[jnp.arange(b), last][:, None, :]
+    x_last = rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
+    logits = logits_from(params["embed"], cfg, x_last)[:, 0]
+    return logits, {"paged": {"k": ks, "v": vs}}
 
 
 # ============================================================ fused sampling

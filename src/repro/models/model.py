@@ -91,8 +91,36 @@ class Model:
                                        n_new)
         return D.sample_from_logits(logits, lane), cache
 
+    def decode_paged_chunk(self, params: dict, cache: dict,
+                           tokens: jax.Array, pos: jax.Array,
+                           n_new: jax.Array, page_table: jax.Array):
+        return D.decode_paged_chunk(self.cfg, params, cache, tokens, pos,
+                                    n_new, page_table)
+
+    def decode_paged_greedy_chunk(self, params: dict, cache: dict,
+                                  tokens: jax.Array, pos: jax.Array,
+                                  n_new: jax.Array, page_table: jax.Array):
+        """Chunked decode over the paged KV pool with fused argmax — the
+        kernel-enabled paged engine's all-greedy step.  KV reads and
+        writes both go through the page table; no dense working cache."""
+        logits, cache = D.decode_paged_chunk(self.cfg, params, cache, tokens,
+                                             pos, n_new, page_table)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def decode_paged_sample_chunk(self, params: dict, cache: dict,
+                                  tokens: jax.Array, pos: jax.Array,
+                                  n_new: jax.Array, page_table: jax.Array,
+                                  lane: dict):
+        """Chunked paged decode with fused sampling."""
+        logits, cache = D.decode_paged_chunk(self.cfg, params, cache, tokens,
+                                             pos, n_new, page_table)
+        return D.sample_from_logits(logits, lane), cache
+
     def cache_specs(self, batch: int, seq_len: int):
         return D.cache_specs(self.cfg, batch, seq_len)
+
+    def paged_cache_specs(self, num_blocks: int, block_size: int):
+        return D.paged_cache_specs(self.cfg, num_blocks, block_size)
 
     def abstract_cache(self, batch: int, seq_len: int):
         return P.abstract(self.cache_specs(batch, seq_len))

@@ -6,7 +6,9 @@ request-lifecycle API.
   ``RequestHandle`` (streaming, ``result()``, ``cancel()``), the
   ``Engine`` protocol (``submit / step / drain / cancel / report``) and
   the ``run_requests`` compatibility shim.
-- ``paging``: BlockAllocator / PrefixCache / KVPool (page-level memory).
+- ``paging``: BlockAllocator / PrefixCache / KVPool / DevicePageView
+  (page-level memory; the device view is the page pool + per-slot page
+  tables the Pallas paged-attention kernel consumes directly).
 - ``scheduler``: FCFS + priority admission with preemption-on-OOM.
 - ``engine``: ServeEngine (contiguous oracle) and PagedServeEngine
   (prefix caching + chunked prefill), tied together by
@@ -17,14 +19,15 @@ from repro.serve.api import (GREEDY, Engine, LaneState, RequestHandle,
                              SamplingParams, run_requests)
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
                                 compare_engines, token_matrix)
-from repro.serve.paging import (BlockAllocator, BlockAllocatorError, KVPool,
-                                PrefixCache, chain_hashes, pages_for)
+from repro.serve.paging import (BlockAllocator, BlockAllocatorError,
+                                DevicePageView, KVPool, PrefixCache,
+                                chain_hashes, pages_for)
 from repro.serve.scheduler import Plan, SchedEntry, Scheduler
 
 __all__ = [
-    "BlockAllocator", "BlockAllocatorError", "Engine", "GREEDY", "KVPool",
-    "LaneState", "PrefixCache", "PagedServeEngine", "Plan", "Request",
-    "RequestHandle", "SamplingParams", "SchedEntry", "Scheduler",
-    "ServeEngine", "chain_hashes", "compare_engines", "pages_for",
-    "run_requests", "token_matrix",
+    "BlockAllocator", "BlockAllocatorError", "DevicePageView", "Engine",
+    "GREEDY", "KVPool", "LaneState", "PrefixCache", "PagedServeEngine",
+    "Plan", "Request", "RequestHandle", "SamplingParams", "SchedEntry",
+    "Scheduler", "ServeEngine", "chain_hashes", "compare_engines",
+    "pages_for", "run_requests", "token_matrix",
 ]

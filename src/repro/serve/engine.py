@@ -15,10 +15,14 @@ based per-request PRNG keys make sampled streams engine-independent).
 
 ``PagedServeEngine`` is the production path: a refcounted block allocator
 + hash-chained prefix cache (serve.paging) so overlapping prompts reuse KV
-pages instead of recomputing them, chunked prefill (``decode_chunk``) so a
-long prompt consumes C tokens per step in the same batched call that
-advances decoding lanes by one, and a priority scheduler
-(serve.scheduler) with preemption-on-OOM and recompute-on-readmit.
+pages instead of recomputing them, chunked prefill so a long prompt
+consumes C tokens per step in the same batched call that advances
+decoding lanes by one, and a priority scheduler (serve.scheduler) with
+preemption-on-OOM and recompute-on-readmit.  Its default KV pathway
+(``kernel="paged"``) keeps the cache *in the page pool on device* and
+attends it through the per-slot page table (``decode_paged_chunk`` →
+``kernels.paged_attention``); the dense per-slot working cache survives
+only as the audited ``kernel="gather"`` fallback.
 
 Sampling is fused into the jitted step (``models.decode.
 sample_from_logits``): the engines exchange only ``[B]`` token vectors
@@ -40,8 +44,8 @@ from repro.models.decode import CompileWatcher
 from repro.models.model import Model
 from repro.serve.api import (GREEDY, LaneState, RequestHandle, SamplingParams,
                              run_requests)
-from repro.serve.paging import (BlockAllocator, KVPool, PrefixCache,
-                                chain_hashes, pages_for)
+from repro.serve.paging import (BlockAllocator, DevicePageView, KVPool,
+                                PrefixCache, chain_hashes, pages_for)
 from repro.serve.scheduler import (DONE, PREEMPTED, RUNNING, WAITING, Plan,
                                    SchedEntry, Scheduler)
 
@@ -305,19 +309,26 @@ class ServeEngine:
 # ================================================================== paged
 
 
-def _chunk_fn_for(model: Model, sampled: bool):
+def _chunk_fn_for(model: Model, sampled: bool, kernel: bool = False):
     """One jitted chunk step per (Model instance, variant), shared by
     every engine built on it (benchmark sweeps construct many engines;
     recompiling per engine would dominate wall time).  Cached on the
     model itself so its lifetime — and the compiled executables' — ends
-    with the model.  Two variants: fused argmax for all-greedy batches
-    (the sampling pipeline never lowers) and fused sampling; jax.jit is
-    lazy, so an unused variant never compiles."""
-    attr = "_chunk_sample_jit" if sampled else "_chunk_greedy_jit"
+    with the model.  Four variants on two axes: fused argmax for
+    all-greedy batches (the sampling pipeline never lowers) vs fused
+    sampling, and the paged-kernel step (KV through the page table) vs
+    the dense-working-cache step; jax.jit is lazy, so unused variants
+    never compile."""
+    attr = (f"_{'paged' if kernel else 'chunk'}"
+            f"_{'sample' if sampled else 'greedy'}_jit")
     fn = getattr(model, attr, None)
     if fn is None:
-        target = (model.decode_sample_chunk if sampled
-                  else model.decode_greedy_chunk)
+        target = {
+            (False, False): model.decode_greedy_chunk,
+            (False, True): model.decode_sample_chunk,
+            (True, False): model.decode_paged_greedy_chunk,
+            (True, True): model.decode_paged_sample_chunk,
+        }[(kernel, sampled)]
         fn = jax.jit(target, donate_argnums=(1,))
         setattr(model, attr, fn)
     return fn
@@ -348,16 +359,33 @@ class _Slot:
     registered: int              # full feed blocks registered / matched
     reg_cursor: int = 0          # next private page usable for registration
     next_input: int = -1         # decode-phase input token
+    table: list[int] = field(default_factory=list)  # logical block -> page
+                                 # (kernel mode: shared then private, in
+                                 # feed order; block i's KV lives wholly
+                                 # in physical page table[i])
 
 
 class PagedServeEngine:
     """Paged-KV continuous batching: prefix reuse + chunked prefill.
 
-    Every step is one fixed-shape ``decode_sample_chunk`` call: prefill
-    lanes feed up to ``chunk`` prompt tokens, decode lanes feed their last
-    sampled token, idle lanes feed nothing (n_new=0).  The dense per-slot
-    cache remains the jitted working set; the page pool holds registered
-    prefix KV that admissions copy in instead of recomputing.
+    Every step is one fixed-shape chunked call: prefill lanes feed up to
+    ``chunk`` prompt tokens, decode lanes feed their last sampled token,
+    idle lanes feed nothing (n_new=0).
+
+    ``kernel`` selects the KV pathway:
+
+    - ``"paged"`` (default, the production path): KV lives in a shared
+      device page pool (``serve.paging.DevicePageView``) and the jitted
+      step (``decode_paged_*_chunk``) writes and attends *through the
+      page table* via the Pallas paged-attention kernel.  Prefix hits
+      are pure metadata — the matched pages simply appear in the new
+      slot's table row, zero copies — and registration publishes the
+      page a block already lives in.
+    - ``"gather"`` (the audited fallback): the dense per-slot working
+      cache remains the jitted working set and admissions gather
+      registered prefix KV from a host ``KVPool`` into slot rows — the
+      contiguous-shaped detour the audit layer flags as
+      ``pathway-kernel`` on dense/moe serving.
 
     Deterministic by construction: the scheduler runs on the engine's
     synthetic tick clock, so a trace (prompts, priorities, arrivals)
@@ -376,27 +404,50 @@ class PagedServeEngine:
                  max_len: int = 256, block_size: int = 16,
                  num_blocks: int | None = None, chunk: int = 8,
                  tick_dt: float = 1.0, use_prefix_cache: bool = True,
-                 admit_every: int = 1, tracer: Tracer | None = None):
+                 admit_every: int = 1, kernel: str = "paged",
+                 tracer: Tracer | None = None):
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"paged engine needs an attention cache (dense/moe); "
                 f"{model.cfg.family!r} serves through ServeEngine")
         if admit_every < 1:
             raise ValueError(f"admit_every must be >= 1, got {admit_every}")
+        if kernel not in ("paged", "gather"):
+            raise ValueError(
+                f"kernel must be 'paged' (attend through the page table) "
+                f"or 'gather' (dense working-cache fallback), got {kernel!r}")
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.chunk = chunk
-        self.cache = model.zero_cache(slots, max_len)
-        k = self.cache["self"]["k"]          # (L, B, S, kv, hd)
-        layers, _, _, n_kv, hd = k.shape
+        self.kernel = kernel
         if num_blocks is None:
             num_blocks = 2 * slots * pages_for(max_len, block_size)
         self.alloc = BlockAllocator(num_blocks, block_size)
         self.prefix = PrefixCache(self.alloc)
         self.prefix_enabled = use_prefix_cache
-        self.pool = KVPool(num_blocks, block_size, layers, n_kv, hd, k.dtype)
+        if kernel == "paged":
+            # KV storage IS the device page pool; no host KVPool, no
+            # per-slot working cache, no admission gather.  Geometry
+            # comes from the declarative spec the jitted paged step is
+            # written against, so the two cannot drift.
+            spec = model.paged_cache_specs(num_blocks, block_size)
+            layers, _, _, n_kv, hd = spec["paged"]["k"].shape
+            self.pool = None
+            self.view = DevicePageView(
+                num_blocks, block_size, layers, n_kv, hd,
+                spec["paged"]["k"].dtype,
+                slots=slots, max_pages=pages_for(max_len, block_size))
+            self.cache = self.view.cache()
+        else:
+            # dense-cache geometry without materializing it twice
+            k = model.abstract_cache(slots, max_len)["self"]["k"]
+            layers, _, _, n_kv, hd = k.shape
+            self.pool = KVPool(num_blocks, block_size, layers, n_kv, hd,
+                               k.dtype)
+            self.view = None
+            self.cache = model.zero_cache(slots, max_len)
         self.now = 0.0
         self.tick_dt = tick_dt
         self.admit_every = admit_every
@@ -417,18 +468,21 @@ class PagedServeEngine:
         def _on_compile(fn, reason, sig):
             self.trace.emit("compile", fn=fn, reason=reason, signature=sig)
 
+        paged = kernel == "paged"
         self._chunk_fn = CompileWatcher(
-            _chunk_fn_for(model, sampled=False), "decode_chunk",
+            _chunk_fn_for(model, sampled=False, kernel=paged),
+            "decode_paged_chunk" if paged else "decode_chunk",
             on_compile=_on_compile)
         self._chunk_sample_fn = CompileWatcher(
-            _chunk_fn_for(model, sampled=True), "decode_sample_chunk",
+            _chunk_fn_for(model, sampled=True, kernel=paged),
+            "decode_paged_sample_chunk" if paged else "decode_sample_chunk",
             on_compile=_on_compile)
         self.trace.emit("engine-init", engine="paged",
                         family=model.cfg.family, arch=model.cfg.name,
                         slots=slots, max_len=max_len, block_size=block_size,
                         chunk=chunk, pages=num_blocks,
                         prefix_cache=use_prefix_cache,
-                        admit_every=admit_every)
+                        admit_every=admit_every, kernel=kernel)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request, *, arrival: float | None = None
@@ -494,20 +548,30 @@ class PagedServeEngine:
             return False
         private = [self.alloc.alloc() for _ in range(need)]
 
-        if matched_len:             # prefix hit: pages -> slot rows, no math
-            kp, vp = self.pool.read(shared)
-            kc, vc = self.cache["self"]["k"], self.cache["self"]["v"]
-            self.cache["self"]["k"] = kc.at[:, slot, :matched_len].set(
-                jnp.asarray(kp[:, :matched_len]))
-            self.cache["self"]["v"] = vc.at[:, slot, :matched_len].set(
-                jnp.asarray(vp[:, :matched_len]))
+        if self.kernel == "paged":
+            # zero-copy prefix reuse: the matched pages (and the fresh
+            # private ones) become this slot's page-table row; the kernel
+            # attends the shared pages in place
+            table = shared + private
+            self.view.bind_slot(slot, table)
             self.pstats.cached_tokens += matched_len
+        else:
+            table = []
+            if matched_len:         # prefix hit: pages -> slot rows, no math
+                kp, vp = self.pool.read(shared)
+                kc, vc = self.cache["self"]["k"], self.cache["self"]["v"]
+                self.cache["self"]["k"] = kc.at[:, slot, :matched_len].set(
+                    jnp.asarray(kp[:, :matched_len]))
+                self.cache["self"]["v"] = vc.at[:, slot, :matched_len].set(
+                    jnp.asarray(vp[:, :matched_len]))
+                self.pstats.cached_tokens += matched_len
 
         self.active[slot] = _Slot(
             entry=entry, req=req, feed=feed,
             hashes=chain_hashes(feed, bs),
             pending=feed[matched_len:], consumed=matched_len,
-            shared=shared, private=private, registered=matched_len // bs)
+            shared=shared, private=private, registered=matched_len // bs,
+            table=table)
         self.sched.mark_running(entry, slot, len(private))
         self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
                         feed_tokens=len(feed), cached_tokens=matched_len,
@@ -515,15 +579,25 @@ class PagedServeEngine:
         return True
 
     def _register_blocks(self, slot: int, st: _Slot) -> None:
-        """Publish newly completed full prompt blocks to the prefix cache
-        (copy rows out to a private page; first writer wins)."""
+        """Publish newly completed full prompt blocks to the prefix cache.
+        Kernel mode: the block's KV already lives in the physical page
+        its table entry names — registration is pure metadata (first
+        writer wins; the loser keeps its private page).  Gather mode:
+        copy the slot's rows out to a private page in the host pool."""
         if not self.prefix_enabled:
             return
         bs = self.alloc.block_size
         while (st.registered < len(st.hashes)
                and (st.registered + 1) * bs <= st.consumed):
             h = st.hashes[st.registered]
-            if not self.prefix.contains(h) and st.reg_cursor < len(st.private):
+            if self.kernel == "paged":
+                if not self.prefix.contains(h):
+                    # table entries at indices >= matched blocks are this
+                    # slot's private pages: fully written, never written
+                    # again (writes only target rows >= consumed)
+                    self.prefix.insert(h, st.table[st.registered])
+            elif (not self.prefix.contains(h)
+                    and st.reg_cursor < len(st.private)):
                 bid = st.private[st.reg_cursor]
                 st.reg_cursor += 1
                 a, b = st.registered * bs, (st.registered + 1) * bs
@@ -544,6 +618,8 @@ class PagedServeEngine:
     def _preempt(self, entry: SchedEntry) -> None:
         st = self.active.pop(entry.slot)
         self.lane.clear(entry.slot)
+        if self.view is not None:
+            self.view.clear_slot(entry.slot)
         self.trace.emit("preempt", rid=st.req.rid, slot=entry.slot,
                         tick=self.now, consumed=st.consumed,
                         released_pages=len(st.shared) + len(st.private))
@@ -553,6 +629,8 @@ class PagedServeEngine:
     def _finish(self, slot: int) -> Request:
         st = self.active.pop(slot)
         self.lane.clear(slot)
+        if self.view is not None:
+            self.view.clear_slot(slot)
         st.req.finished = True
         st.req.t_done = time.perf_counter()
         self.trace.emit("finish", rid=st.req.rid, slot=slot, tick=self.now,
@@ -575,6 +653,8 @@ class PagedServeEngine:
         if entry.state == RUNNING:
             st = self.active.pop(entry.slot)
             self.lane.clear(entry.slot)
+            if self.view is not None:
+                self.view.clear_slot(entry.slot)
             phase = "prefill" if st.pending else "decode"
             released = len(st.shared) + len(st.private)
             self._release(st)
@@ -642,7 +722,19 @@ class PagedServeEngine:
                 toks[slot, 0] = st.next_input
                 n_new[slot] = 1
 
-        if need_sample:
+        if self.kernel == "paged":
+            pt = jnp.asarray(self.view.page_table)
+            if need_sample:
+                sampled, self.cache = self._chunk_sample_fn(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(n_new), pt,
+                    self.lane.as_args())
+            else:
+                sampled, self.cache = self._chunk_fn(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(n_new), pt)
+            self.view.adopt(self.cache)
+        elif need_sample:
             sampled, self.cache = self._chunk_sample_fn(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(pos), jnp.asarray(n_new), self.lane.as_args())
@@ -719,6 +811,7 @@ class PagedServeEngine:
             "chunk": self.chunk,
             "prefix_cache": self.prefix_enabled,
             "admit_every": self.admit_every,
+            "kernel": self.kernel,
             "preemptions": self.sched.stats.preemptions,
             # worst per-program count (greedy / sampled variants each
             # bound at one compile; see ServeEngine.report)
@@ -744,15 +837,27 @@ def compare_engines(model: Model, params: Any,
                     make_requests: Callable[[], list[Request]], *,
                     slots: int = 2, max_len: int = 64, block_size: int = 8,
                     chunk: int = 4, repeats: int = 1,
-                    sampling: SamplingParams | None = None):
+                    sampling: SamplingParams | None = None,
+                    engine_kwargs: dict[str, dict] | None = None):
     """The paged engine's correctness proof, in the paper's methodology:
     the same workload under two environments (contiguous oracle vs paged)
     must agree token-for-token.  With ``sampling`` given, both engines
     decode the workload under those SamplingParams — counter-based keys
     make sampled streams engine-independent, so the verdict is the same
-    bit-identity as greedy.  Returns a core.verify.DualEnvReport whose
-    verdicts CI gates on."""
+    bit-identity as greedy.
+
+    ``engine_kwargs`` pins per-engine construction explicitly instead of
+    relying on defaults/globals: ``{"contiguous": {...}, "paged": {...}}``
+    — e.g. ``{"paged": {"kernel": "gather"}}`` holds the oracle verdict
+    over the dense-fallback pathway while ``{"paged": {"kernel":
+    "paged"}}`` pins the Pallas page-table kernel on.
+
+    Returns a core.verify.DualEnvReport whose verdicts CI gates on."""
     from repro.core.verify import DualEnvHarness
+
+    ek = engine_kwargs or {}
+    contig_kw = dict(ek.get("contiguous", {}))
+    paged_kw = dict(ek.get("paged", {}))
 
     def requests() -> list[Request]:
         reqs = make_requests()
@@ -765,12 +870,14 @@ def compare_engines(model: Model, params: Any,
     n, max_new = len(probe), max(r.max_new for r in probe)
 
     def run_contiguous():
-        eng = ServeEngine(model, params, slots=slots, max_len=max_len)
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                          **contig_kw)
         return token_matrix(eng.run(requests()), n, max_new)
 
     def run_paged():
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
-                               block_size=block_size, chunk=chunk)
+                               block_size=block_size, chunk=chunk,
+                               **paged_kw)
         return token_matrix(eng.run(requests()), n, max_new)
 
     harness = DualEnvHarness(repeats=repeats, warmup=0)

@@ -13,13 +13,18 @@ framework's fixed-shape decode path:
   recomputing prefill.  Registered pages are immutable; readers hold a
   refcount (copy-on-write at page granularity: writers always write into
   freshly allocated pages).
-- ``KVPool`` is the physical storage for registered pages — host numpy
-  arrays of shape ``(layers, num_blocks, block_size, kv_heads, head_dim)``
-  per k/v, written once at registration and gathered at admission.
+- ``KVPool`` is the physical storage for registered pages on the
+  *gather* pathway — host numpy arrays of shape ``(layers, num_blocks,
+  block_size, kv_heads, head_dim)`` per k/v, written once at
+  registration and gathered at admission.
+- ``DevicePageView`` is the *kernel* pathway's storage: the page pool as
+  device arrays plus per-slot page tables, consumed directly by the
+  Pallas paged-attention kernel — KV is written and attended through
+  the table, prefix sharing is pure metadata, and no dense per-slot
+  working cache exists.
 
-The engine keeps a dense per-slot working cache for the jitted decode
-step (fixed shapes); paging governs *admission* (prefix reuse), *capacity*
-(page accounting + preemption-on-OOM), and *sharing* (refcounts).
+Paging governs *admission* (prefix reuse), *capacity* (page accounting +
+preemption-on-OOM), and *sharing* (refcounts) on both pathways.
 """
 from __future__ import annotations
 
@@ -274,6 +279,61 @@ class KVPool:
         n = idx.shape[0] * self.block_size
         return (k.reshape(k.shape[0], n, *k.shape[3:]),
                 v.reshape(v.shape[0], n, *v.shape[3:]))
+
+
+class DevicePageView:
+    """Device-resident page pool + per-slot page tables for the Pallas
+    paged-attention kernel (``kernels.paged_attention``).
+
+    The pool arrays ``k``/``v`` — ``(layers, num_blocks, block_size, kv,
+    hd)`` — ARE the KV storage on the kernel path: the jitted paged step
+    writes fresh rows into them through the page table and attends every
+    page through the same table, so prefix sharing is pure metadata (a
+    shared page appears in many slots' table rows) and registration
+    copies nothing.  The arrays are donated to the step and re-adopted
+    from its output each tick (``cache()`` / ``adopt()``).
+
+    ``page_table`` is the host mirror the engine keeps in sync with the
+    ``BlockAllocator``: ``bind_slot`` installs a slot's ordered physical
+    pages when the allocator hands them out at admission, ``clear_slot``
+    zeroes the row when the pages are released (finish / cancel /
+    preempt).  Cleared and padding entries hold page 0 — a always-valid
+    index the kernel masks by sequence length, never an out-of-bounds
+    read.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, layers: int,
+                 n_kv: int, head_dim: int, dtype, *, slots: int,
+                 max_pages: int):
+        import jax.numpy as jnp
+        shape = (layers, num_blocks, block_size, n_kv, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.block_size = block_size
+        self.max_pages = max_pages
+        self.page_table = np.zeros((slots, max_pages), np.int32)
+
+    # ------------------------------------------------------------- tables
+    def bind_slot(self, slot: int, blocks: Sequence[int]) -> None:
+        if len(blocks) > self.max_pages:
+            raise BlockAllocatorError(
+                f"slot {slot}: {len(blocks)} pages exceed the table's "
+                f"{self.max_pages}")
+        self.page_table[slot] = 0
+        self.page_table[slot, :len(blocks)] = blocks
+
+    def clear_slot(self, slot: int) -> None:
+        self.page_table[slot] = 0
+
+    # -------------------------------------------------------------- pools
+    def cache(self) -> dict:
+        """The pool as the jitted step's cache pytree (donated)."""
+        return {"paged": {"k": self.k, "v": self.v}}
+
+    def adopt(self, cache: dict) -> None:
+        """Re-own the pool arrays returned by the jitted step."""
+        self.k = cache["paged"]["k"]
+        self.v = cache["paged"]["v"]
 
 
 def pages_for(n_tokens: int, block_size: int) -> int:

@@ -79,6 +79,20 @@ def given(*samplers):
     return deco
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _kernels_interpret_off_accelerator():
+    """Force Pallas kernels into interpret mode when no accelerator is
+    attached, so the ``kernel``-marked parity suites (and any test that
+    forces the paged-attention kernel onto the serving path) run the
+    real kernel bodies on CPU CI instead of failing to lower Mosaic."""
+    from repro.kernels import ops
+    prev = ops.FORCE_INTERPRET
+    if jax.default_backend() != "tpu":
+        ops.FORCE_INTERPRET = True
+    yield
+    ops.FORCE_INTERPRET = prev
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

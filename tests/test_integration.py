@@ -119,6 +119,42 @@ def test_paged_engine_matches_contiguous_oracle():
     assert eng.pstats.cached_tokens > 0
     assert eng.report()["prefix_hit_rate"] > 0
     eng.alloc.check()
+    # and the production default is the page-table kernel pathway: KV
+    # lives in the device page pool, no dense working cache, no host pool
+    assert eng.report()["kernel"] == "paged"
+    assert eng.pool is None and "paged" in eng.cache
+
+
+def test_kernel_and_gather_pathways_both_match_oracle():
+    """The oracle holds with the KV pathway pinned explicitly either way
+    (engine_kwargs passthrough): the Pallas page-table mode and the dense
+    gather fallback each reproduce the contiguous streams, greedy and
+    sampled — the ISSUE's end-to-end kernel-enabled oracle."""
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve import SamplingParams
+    from repro.serve.engine import Request, compare_engines
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, size=16).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=3 + i).tolist()
+             for i in range(4)]
+
+    def make():
+        return [Request(rid=i, prompt=shared + tails[i], max_new=6)
+                for i in range(4)]
+
+    sampled = SamplingParams(temperature=0.8, top_k=16, top_p=0.9, seed=2)
+    for kernel in ("paged", "gather"):
+        for sp in (None, sampled):
+            report = compare_engines(
+                model, params, make, slots=2, max_len=64, block_size=8,
+                chunk=4, sampling=sp,
+                engine_kwargs={"paged": {"kernel": kernel}})
+            assert report.ok, (kernel, sp, report.summary())
 
 
 def test_decode_matches_prefill_continuation():

@@ -121,11 +121,18 @@ def test_result_drains_to_completion_and_matches_run(served):
 
 def _assert_pages_clean(eng):
     """All non-free pages must be exactly the prefix cache's registered
-    blocks (readers all released); the allocator invariants must hold."""
+    blocks (readers all released); the allocator invariants must hold.
+    Kernel mode additionally requires every inactive slot's device
+    page-table row to be cleared — a stale row would let the next
+    occupant attend a freed (possibly reallocated) page."""
     eng.alloc.check()
     assert eng.alloc.in_use == len(eng.prefix)
     for bid in eng.prefix._map.values():
         assert eng.alloc.refcount(bid) == 1     # cache's own ref only
+    if eng.view is not None:
+        for slot in range(eng.slots):
+            if slot not in eng.active:
+                assert (eng.view.page_table[slot] == 0).all()
 
 
 def test_cancel_mid_prefill_releases_pages(served):
@@ -212,6 +219,71 @@ def test_contiguous_engine_cancels_waiting_and_active(served):
     assert eng.stats.cancelled == 2
     h2 = eng.submit(Request(rid=2, prompt=list(prompts[2]), max_new=4))
     assert len(h2.result().out) == 4             # engine still serves
+
+
+# ------------------------------------------------- kernel-pinned oracles
+
+
+def test_engine_kwargs_pins_kernel_on_and_off(served):
+    """The oracle must be holdable over an explicitly chosen KV pathway:
+    kernel-on (attend through the device page table) and kernel-off
+    (dense working-cache gather) both reproduce the contiguous streams,
+    greedy and sampled — no reliance on engine defaults or globals."""
+    cfg, model, params = served
+    prompts = _prompts(cfg)
+
+    def make():
+        return [Request(rid=i, prompt=list(p), max_new=8)
+                for i, p in enumerate(prompts)]
+
+    for kernel in ("paged", "gather"):
+        for sampling in (None, SAMPLED):
+            report = compare_engines(
+                model, params, make, slots=2, max_len=64, block_size=8,
+                chunk=4, sampling=sampling,
+                engine_kwargs={"paged": {"kernel": kernel}})
+            assert report.ok, (kernel, sampling, report.summary())
+
+
+def test_kernel_mode_is_the_default_and_reported(served):
+    cfg, model, params = served
+    eng = _paged(model, params)
+    assert eng.kernel == "paged" and eng.pool is None
+    assert eng.view is not None
+    assert eng.report()["kernel"] == "paged"
+    gather = _paged(model, params, kernel="gather")
+    assert gather.report()["kernel"] == "gather" and gather.view is None
+    with pytest.raises(ValueError, match="kernel"):
+        _paged(model, params, kernel="dense")
+
+
+def test_cancel_mid_decode_under_device_page_view(served):
+    """Cancel mid-decode on the kernel path: every page reference is
+    released, the slot's device page-table row is cleared, and the freed
+    pages are immediately reusable by a waiting request whose stream
+    stays correct (end-to-end vs the contiguous oracle)."""
+    cfg, model, params = served
+    prompts = _prompts(cfg, n=3)
+    eng = _paged(model, params)
+    h0 = eng.submit(Request(rid=0, prompt=list(prompts[0]), max_new=16))
+    h1 = eng.submit(Request(rid=1, prompt=list(prompts[1]), max_new=4))
+    while not h0.req.out:
+        eng.step()
+    slot0 = h0.entry.slot
+    assert (eng.view.page_table[slot0] != 0).any()
+    assert h0.cancel()
+    assert (eng.view.page_table[slot0] == 0).all()
+    done = eng.drain()
+    assert [r.rid for r in done] == [1]
+    _assert_pages_clean(eng)
+    # freed capacity is genuinely reusable: a fresh request decodes the
+    # same stream the contiguous oracle produces for its prompt
+    h2 = eng.submit(Request(rid=2, prompt=list(prompts[2]), max_new=4))
+    out = list(h2.result().out)
+    ref = ServeEngine(model, params, slots=2, max_len=64).run(
+        [Request(rid=0, prompt=list(prompts[2]), max_new=4)])[0].out
+    assert out == ref
+    _assert_pages_clean(eng)
 
 
 # -------------------------------------------------------------- sampling
