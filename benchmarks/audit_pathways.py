@@ -20,7 +20,16 @@ as an error:
      copied into a dense per-slot working cache at admission instead of
      attended through the device page table — the contiguous-shaped
      detour the paged-attention kernel exists to remove, flagged
-     ``pathway-kernel``.
+     ``pathway-kernel``;
+  6. preemption disabled under bursty overload: long low-priority
+     requests hold every slot when a high-priority burst arrives, and
+     with no eviction the burst queues behind them.  Streams stay
+     identical (admission still sorts by priority; deterministic
+     sampling is schedule-invariant; recompute-on-readmit reproduces
+     the healthy streams) but the burst's tail TTFT explodes — caught
+     by the registry's *quantile* SLO expectations (``pathway-slo``),
+     calibrated from a healthy preemption-on run of the same
+     generated bursty trace.
 
 A request-lifecycle probe additionally runs sampled + cancelled requests
 through the audited pathway and gates on their events being visible in
@@ -66,6 +75,7 @@ SEEDS = {
     "shrunk-page-size": "pathway-page-geometry",
     "disabled-prefix-cache": "pathway-prefix-cache",
     "slow-admission": "pathway-ttft",
+    "bursty-overload-no-preemption": "pathway-slo",
 }
 
 #: Slow-admission seed: scheduler consulted every N-th tick only.
@@ -219,6 +229,92 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
                 "detail": f"seeded misconfiguration {name!r} changed the "
                           f"token stream — it must degrade the pathway, "
                           f"not the answer"})
+
+    # ------------------- seed 6: bursty overload, preemption disabled.
+    # A generated bursty trace: two long low-priority requests arrive
+    # first and saturate both slots of a dedicated small engine; pairs
+    # of short high-priority requests burst in afterwards.  With
+    # preemption the bursts evict the lows and see fast first tokens;
+    # with it disabled they queue behind ~40 ticks of low-priority
+    # decode.  The max-TTFT rule cannot cleanly catch this (the healthy
+    # run's preempted lows also wait), so this seed is the quantile
+    # SLO's reason to exist: p99 TTFT is calibrated from the healthy
+    # preemption-on run of the *same* trace and breached only when the
+    # scheduler misconfiguration inflates the tail.
+    from repro.serve import WorkloadSpec, generate
+
+    ov_spec = WorkloadSpec(
+        name="bursty-overload", family="chat", arrival="bursty",
+        n_requests=10, vocab_size=cfg.vocab_size, seed=seed + 7,
+        max_new=4, prefix_len=12, n_streams=2, suffix_lo=2, suffix_hi=4,
+        burst_size=2, burst_gap=12.0,
+        priorities=(0, 0, 2, 2, 2, 2, 2, 2, 2, 2))
+    ov_trace = generate(ov_spec)
+    ov_geom = dict(slots=2, max_len=64, block_size=8, chunk=4)
+    LOW_MAX_NEW = 40
+
+    def ov_requests():
+        reqs = ov_trace.requests()
+        for r in reqs[:2]:
+            r.max_new = LOW_MAX_NEW     # the lows run long
+        return reqs
+
+    def ov_run(preemption: bool):
+        a = RunAudit(_ctx(cfg))
+        e = PagedServeEngine(model, params, preemption=preemption,
+                             tracer=a.tracer, **ov_geom)
+        d = e.run(ov_requests(), arrivals=list(ov_trace.arrivals))
+        return a, e, token_matrix(d, ov_spec.n_requests, LOW_MAX_NEW)
+
+    ov_audit, ov_eng, ov_tokens = ov_run(preemption=True)
+    ov_lat = Evidence(tracer=ov_audit.tracer).request_latencies()
+    from repro.audit import nearest_rank
+    ov_p99 = nearest_rank(
+        [latency["ttft_ticks"] for latency in ov_lat.values()], 0.99)
+    slo_rule = Rule(
+        name="bench-burst-slo", families=("dense", "moe"),
+        workloads=("bench:audit_pathways",),
+        expect=ExpectedSignature(p99_ttft_ticks=TTFT_MARGIN * ov_p99))
+    ov_audit.registry.register(slo_rule)
+    ov_healthy = ov_audit.evaluate(engine_report=ov_eng.report())
+    findings.extend(ov_healthy)     # calibrated on itself: must be clean
+
+    s_audit, s_eng, s_tokens = ov_run(preemption=False)
+    s_audit.registry.register(slo_rule)
+    s_findings = s_audit.evaluate(engine_report=s_eng.report())
+    s_lat = Evidence(tracer=s_audit.tracer).request_latencies()
+    name = "bursty-overload-no-preemption"
+    hit = [f for f in s_findings
+           if f["kind"] == SEEDS[name] and f["severity"] == "error"]
+    token_identical = bool((s_tokens == ov_tokens).all())
+    detections[name] = {
+        "detected": bool(hit),
+        "expected_kind": SEEDS[name],
+        "findings": s_findings,
+        "token_identical": token_identical,
+        "healthy_preemptions": ov_eng.sched.stats.preemptions,
+        "seeded_preemptions": s_eng.sched.stats.preemptions,
+        "healthy_p99_ttft": round(ov_p99, 2),
+        "seeded_p99_ttft": round(nearest_rank(
+            [latency["ttft_ticks"] for latency in s_lat.values()], 0.99), 2),
+    }
+    if not hit:
+        findings.append({
+            "severity": "error", "kind": "audit-detector-miss",
+            "detail": f"seeded misconfiguration {name!r} was not flagged "
+                      f"as {SEEDS[name]} "
+                      f"(got {[f['kind'] for f in s_findings]})"})
+    if not token_identical:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-divergence",
+            "detail": f"seeded misconfiguration {name!r} changed the "
+                      f"token stream — it must degrade the pathway, "
+                      f"not the answer"})
+    if ov_eng.sched.stats.preemptions == 0:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-uncontrasted",
+            "detail": "bursty-overload trace never triggered preemption "
+                      "in the healthy run: the seed contrasts nothing"})
 
     # ------------------------------------ request-lifecycle probe: the
     # cancel and sampling pathways must be *visible* in the audit trace

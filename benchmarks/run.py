@@ -19,6 +19,7 @@ SUITES = [
     ("ring_podscale", "benchmarks.ring_podscale"),  # Figs 6/7 at paper scale (dry-run)
     ("serve_throughput", "benchmarks.serve_throughput"),  # paged serving
     ("audit_pathways", "benchmarks.audit_pathways"),  # runtime audit gate
+    ("serve_workloads", "benchmarks.serve_workloads"),  # workload-family SLOs
 ]
 
 

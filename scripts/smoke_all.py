@@ -1,6 +1,8 @@
 """Dev harness: tiny forward/train/prefill/decode for every family on CPU,
-plus the serving-throughput and audit-pathway smokes gated on their
-diagnostics findings.
+plus the serving-throughput, audit-pathway, and workload-SLO smokes
+gated on their diagnostics findings, a ledger integrity audit (orphan
+``BENCH_*.json`` files are errors), and the rolling-median throughput
+trend over ledger history.
 
     PYTHONPATH=src python scripts/smoke_all.py [archs...] [--json]
         [--ledger-dir DIR] [--update-baseline] [--artifacts-dir DIR]
@@ -33,6 +35,17 @@ from repro.models import build
 from repro.train.step import init_train_state, make_train_step
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Benchmarks this harness runs, in order.  Their ``<name>_{smoke,full}``
+#: keys are the only ledger files allowed to exist in the ledger dir —
+#: ``Ledger.audit_owned`` flags anything else as an orphan (a baseline
+#: nobody maintains silently attests metrics nothing measures).
+BENCHES = ["serve_throughput", "audit_pathways", "serve_workloads"]
+
+
+def owned_ledger_keys(benches=None) -> list[str]:
+    return [f"{b}_{mode}" for b in (benches or BENCHES)
+            for mode in ("smoke", "full")]
 
 
 def smoke_arch(name: str) -> dict:
@@ -115,10 +128,25 @@ def main() -> int:
     audit_rec = run_bench("audit_pathways.py", ledger_flags)
     diag.extend(audit_rec["findings"], source="audit_pathways")
 
+    workloads_rec = run_bench("serve_workloads.py", ledger_flags)
+    diag.extend(workloads_rec["findings"], source="serve_workloads")
+
     ledger_deltas = {
         "serve_throughput": serve_rec.get("ledger"),
         "audit_pathways": audit_rec.get("ledger"),
+        "serve_workloads": workloads_rec.get("ledger"),
     }
+
+    # ledger integrity + trend: orphan BENCH files are errors; the
+    # rolling median of the ungated wall-clock throughput is the
+    # trajectory signal the per-run numbers are too noisy to carry
+    from repro.audit import Ledger
+
+    ledger = Ledger(args.ledger_dir)
+    diag.extend(ledger.audit_owned(owned_ledger_keys()),
+                source="ledger-integrity")
+    throughput_trend = ledger.rolling_median(
+        "serve_throughput_smoke", "paged_tokens_per_s")
     ok = diag.gate()
 
     report = {
@@ -135,6 +163,16 @@ def main() -> int:
             "detected_all": audit_rec["detected_all"],
             "lifecycle": audit_rec.get("lifecycle"),
             "metrics": audit_rec["metrics"]},
+        "serve_workloads": {
+            "oracle_ok": workloads_rec["oracle_ok"],
+            "slo_ok": workloads_rec["slo_ok"],
+            "families": [{
+                "workload": f["workload"]["workload"],
+                "p99_ttft_ticks": f["p99_ttft_ticks"],
+                "p99_decode_gap_ticks": f["p99_decode_gap_ticks"],
+                "prefix_hit_rate": f["report"]["prefix_hit_rate"],
+            } for f in workloads_rec["families"]]},
+        "paged_tokens_per_s_trend": throughput_trend,
         "findings": diag.findings,
         "ledger": ledger_deltas,
     }
@@ -165,6 +203,14 @@ def main() -> int:
         print(f"OK audit_pathways          "
               f"detected_all={audit_rec['detected_all']} "
               f"oracle_ok={audit_rec['oracle_ok']}")
+        print(f"OK serve_workloads         "
+              f"slo_ok={workloads_rec['slo_ok']} "
+              f"oracle_ok={workloads_rec['oracle_ok']}")
+        if throughput_trend:
+            print(f"   paged_tokens_per_s     "
+                  f"median={throughput_trend['median']} "
+                  f"over n={throughput_trend['n']} "
+                  f"latest={throughput_trend['latest']}")
         print("ALL OK" if ok else "GATE FAILED")
     return 0 if ok else 1
 

@@ -14,21 +14,32 @@ idea to runtime behaviour:
                  (arch family, mesh shape, workload) → expected
                  signatures; mismatches become diagnostics findings
   ledger       — persisted per-benchmark perf ledger (``BENCH_*.json``)
-                 with baseline load/compare/update semantics and
-                 regression thresholds
+                 with baseline load/compare/update semantics, regression
+                 thresholds, orphan-file integrity auditing, and
+                 rolling-median trend extraction over run history
+  metrics      — live serving observability: a Tracer-fed
+                 ``MetricsRegistry`` (counters / gauges / fixed-bucket
+                 histograms on the tick clock), a queryable ``EventLog``
+                 (JSONL export, filter by kind/rid/tick window), and the
+                 ``MetricsServer`` HTTP exposition (``/metrics``,
+                 ``/metrics.json``, ``/healthz``, ``/events``)
   report       — folds traces + expectation mismatches + ledger
                  regressions into ``core.diagnostics.Diagnostics`` so
                  CI gates on them
 """
 from repro.audit.expectations import (DEFAULT_REGISTRY, AuditContext,
                                       Evidence, ExpectationRegistry,
-                                      ExpectedSignature, Rule)
+                                      ExpectedSignature, Rule, nearest_rank)
 from repro.audit.ledger import Ledger, LedgerResult, MetricSpec
+from repro.audit.metrics import (EventLog, MetricsRegistry, MetricsServer,
+                                 ServeMetrics, query_jsonl)
 from repro.audit.report import RunAudit
-from repro.audit.trace import NULL_TRACER, TraceEvent, Tracer
+from repro.audit.trace import KNOWN_KINDS, NULL_TRACER, TraceEvent, Tracer
 
 __all__ = [
-    "AuditContext", "DEFAULT_REGISTRY", "Evidence", "ExpectationRegistry",
-    "ExpectedSignature", "Ledger", "LedgerResult", "MetricSpec",
-    "NULL_TRACER", "Rule", "RunAudit", "TraceEvent", "Tracer",
+    "AuditContext", "DEFAULT_REGISTRY", "EventLog", "Evidence",
+    "ExpectationRegistry", "ExpectedSignature", "KNOWN_KINDS", "Ledger",
+    "LedgerResult", "MetricSpec", "MetricsRegistry", "MetricsServer",
+    "NULL_TRACER", "Rule", "RunAudit", "ServeMetrics", "TraceEvent",
+    "Tracer", "nearest_rank", "query_jsonl",
 ]

@@ -162,6 +162,14 @@ class ExpectedSignature:
     # register calibrated rules for traces whose latencies they know.
     max_ttft_ticks: float | None = None
     max_decode_gap_ticks: float | None = None
+    # population SLOs over the same tick-clock latencies: the worst-case
+    # bounds above catch a single pathological request, the quantile
+    # bounds catch systemic degradation under load (a misconfigured
+    # scheduler inflates the p99 long before it touches the max on a
+    # small trace).  Violations are ``pathway-slo`` findings.  Nearest-
+    # rank quantiles over deterministic tick latencies: bit-reproducible.
+    p99_ttft_ticks: float | None = None
+    p99_decode_gap_ticks: float | None = None
     allowed_collectives: frozenset[str] | None = None
     max_collective_group: int | None = None  # default: ctx.n_devices
     forbid_host_transfer: bool = False
@@ -213,6 +221,18 @@ class ExpectationRegistry:
         for rule in self.match(ctx):
             findings.extend(_check_rule(rule, ctx, ev))
         return findings
+
+
+def nearest_rank(values: Sequence[float], q: float) -> float:
+    """Deterministic nearest-rank quantile (the ceil(q*n)-th order
+    statistic) — no interpolation, so SLO judgements over tick-clock
+    latencies are bit-reproducible across platforms."""
+    if not values:
+        raise ValueError("quantile of an empty population")
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"quantile must be in (0, 1], got {q}")
+    ordered = sorted(values)
+    return ordered[min(math.ceil(q * len(ordered)), len(ordered)) - 1]
 
 
 def _find(rule: Rule, kind: str, detail: str) -> dict:
@@ -294,6 +314,32 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                             rule, "pathway-decode-latency",
                             f"request {rid} averaged {worst:.2f} ticks per "
                             f"decoded token (> {sig.max_decode_gap_ticks:.2f})"))
+
+    if sig.p99_ttft_ticks is not None or sig.p99_decode_gap_ticks is not None:
+        lat = ev.request_latencies()
+        if lat:
+            if sig.p99_ttft_ticks is not None:
+                p99 = nearest_rank(
+                    [l["ttft_ticks"] for l in lat.values()], 0.99)
+                if p99 > sig.p99_ttft_ticks:
+                    out.append(_find(
+                        rule, "pathway-slo",
+                        f"p99 TTFT {p99:.2f} ticks over {len(lat)} "
+                        f"request(s) breaches the "
+                        f"{sig.p99_ttft_ticks:.2f}-tick SLO: the serving "
+                        f"pathway degrades under this load (streams stay "
+                        f"identical; the tail latency does not)"))
+            if sig.p99_decode_gap_ticks is not None:
+                gaps = [l["decode_gap_ticks"] for l in lat.values()
+                        if "decode_gap_ticks" in l]
+                if gaps:
+                    p99 = nearest_rank(gaps, 0.99)
+                    if p99 > sig.p99_decode_gap_ticks:
+                        out.append(_find(
+                            rule, "pathway-slo",
+                            f"p99 inter-token gap {p99:.2f} ticks breaches "
+                            f"the {sig.p99_decode_gap_ticks:.2f}-tick SLO "
+                            f"({len(gaps)} finished request(s))"))
 
     if sig.max_compiles_per_fn is not None:
         for fn, n in ev.compile_counts().items():

@@ -84,6 +84,62 @@ class Ledger:
         self.root.mkdir(parents=True, exist_ok=True)
         self.path(bench).write_text(json.dumps(rec, indent=1, sort_keys=True))
 
+    # --------------------------------------------------------- integrity
+    def scan(self) -> list[Path]:
+        """Every ``BENCH_*.json`` under the root, sorted by name."""
+        return sorted(self.root.glob("BENCH_*.json"))
+
+    def audit_owned(self, owned: Sequence[str]) -> list[dict]:
+        """Flag ledger files no registered benchmark owns.
+
+        A ``BENCH_*.json`` whose ``bench`` name (the record field, or the
+        filename stem for unparseable files) is not in ``owned`` is a
+        stale artifact: either its benchmark was deleted without its
+        ledger, or the file was written by code that never landed.
+        Orphans are ``error`` findings — a baseline nobody maintains is
+        worse than none, because it silently attests metrics nothing
+        measures anymore."""
+        owned_set = set(owned)
+        out: list[dict] = []
+        for p in self.scan():
+            rec = None
+            try:
+                rec = json.loads(p.read_text())
+            except (json.JSONDecodeError, OSError):
+                pass
+            name = (rec or {}).get("bench") or p.stem[len("BENCH_"):]
+            if name not in owned_set:
+                out.append({
+                    "severity": "error", "kind": "ledger-orphan",
+                    "detail": f"{p.name}: ledger for {name!r} has no "
+                              f"registered benchmark owner (known: "
+                              f"{sorted(owned_set)}); delete the file or "
+                              f"register the benchmark",
+                })
+        return out
+
+    def rolling_median(self, bench: str, metric: str,
+                       window: int = 9) -> dict | None:
+        """Median of ``metric`` over the last ``window`` history entries.
+
+        Noisy wall-clock metrics (tracked ungated) are unreadable run to
+        run on a shared machine; the rolling median over ledger history
+        is the trajectory signal.  Returns ``{median, n, latest}`` or
+        ``None`` when no history entry carries the metric."""
+        rec = self.load(bench)
+        if not rec:
+            return None
+        vals = [h["metrics"][metric] for h in rec.get("history", [])
+                if metric in h.get("metrics", {})][-window:]
+        if not vals:
+            return None
+        ordered = sorted(vals)
+        mid = len(ordered) // 2
+        med = (ordered[mid] if len(ordered) % 2
+               else (ordered[mid - 1] + ordered[mid]) / 2.0)
+        return {"median": round(med, 4), "n": len(vals),
+                "latest": vals[-1]}
+
     # ----------------------------------------------------------- compare
     def compare(self, bench: str, metrics: dict[str, float],
                 specs: Sequence[MetricSpec], *,

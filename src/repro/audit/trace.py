@@ -10,6 +10,12 @@ totals even when old events have been dropped.
 an unconditional ``tracer.emit(...)`` call and the disabled path costs
 one attribute lookup + empty call — no ``if tracer:`` branches sprinkled
 through engines.
+
+Subscribers (``tracer.subscribe``) observe every event *at emission*,
+before the ring can drop it — the live-metrics layer
+(``audit.metrics``) is built on this: histograms and counters stay
+exact on long runs whose early events the bounded ring has already
+evicted.
 """
 from __future__ import annotations
 
@@ -18,6 +24,25 @@ from collections import Counter, deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
+
+#: Every event kind the instrumented layers in ``src/`` may emit.  The
+#: emit-kind lint (tests/test_audit.py) greps ``tracer.emit("...")`` /
+#: ``tracer.span("...")`` literals out of the source tree and asserts
+#: they all appear here, so the metrics layer and the expectation
+#: registry can never silently miss a pathway because someone added an
+#: emitter without declaring its kind.
+KNOWN_KINDS = frozenset({
+    # serve.engine — request lifecycle + hot loop (both engines)
+    "engine-init", "submit", "admit", "first-token", "step", "preempt",
+    "finish", "cancel", "compile",
+    # serve.scheduler — planning decisions
+    "sched-admit", "sched-readmit", "sched-preempt", "sched-done",
+    "sched-cancel",
+    # launch.train — training loop + checkpointing
+    "train-step", "ckpt-save", "ckpt-restore",
+    # launch.dryrun — lowering/compile attestation cells
+    "dryrun-lower", "dryrun-compile", "dryrun-error",
+})
 
 
 @dataclass
@@ -47,13 +72,30 @@ class Tracer:
         self._ring: deque[TraceEvent] = deque(maxlen=capacity)
         self._counts: Counter[str] = Counter()
         self._seq = 0
+        self._subs: list[Callable[[TraceEvent], None]] = []
 
     # ------------------------------------------------------------- record
     def emit(self, kind: str, /, **data: Any) -> None:
         # kind is positional-only so a payload may carry its own "kind"
-        self._ring.append(TraceEvent(self._seq, self.clock(), kind, data))
+        ev = TraceEvent(self._seq, self.clock(), kind, data)
+        self._ring.append(ev)
         self._counts[kind] += 1
         self._seq += 1
+        for sub in self._subs:
+            sub(ev)
+
+    # --------------------------------------------------------- subscribe
+    def subscribe(self, fn: Callable[[TraceEvent], None]) -> Callable:
+        """Register a live observer called with every event at emission —
+        *before* the bounded ring can evict it, so a subscriber sees the
+        complete stream even when the ring has wrapped (the metrics
+        layer's feed contract).  Returns ``fn`` so callers can hold it
+        for ``unsubscribe``."""
+        self._subs.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[TraceEvent], None]) -> None:
+        self._subs.remove(fn)
 
     @contextmanager
     def span(self, kind: str, /, **data: Any) -> Iterator[dict]:

@@ -14,6 +14,15 @@ Both engines are driven through the unified request-lifecycle API
 ``SamplingParams`` (greedy by default; counter-based PRNG keys make
 sampled streams deterministic and engine-independent) and drained, and
 per-request TTFT comes from the audit tracer's lifecycle events.
+
+``--metrics-port`` starts the live observability endpoint
+(``audit.metrics.MetricsServer``): a ``ServeMetrics`` registry and an
+``EventLog`` subscribe to the audit tracer, so ``/metrics`` (Prometheus
+text), ``/metrics.json`` (snapshot with deterministic quantiles),
+``/events`` (filtered JSONL), and ``/healthz`` reflect the run as it
+happens.  Port 0 picks an ephemeral port (reported in the output);
+``--metrics-linger`` keeps the endpoint up after the drain so an
+operator can scrape the finished run.
 """
 from __future__ import annotations
 
@@ -24,7 +33,8 @@ import time
 import jax
 import numpy as np
 
-from repro.audit import AuditContext, Evidence, RunAudit
+from repro.audit import (AuditContext, Evidence, EventLog, MetricsServer,
+                         RunAudit, ServeMetrics)
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
@@ -37,7 +47,8 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           engine: str = "paged", block_size: int = 8,
           chunk: int = 4, shared_prefix: int = 0,
           use_prefix_cache: bool = True, kernel: str = "paged",
-          audit: bool = True,
+          audit: bool = True, metrics_port: int | None = None,
+          metrics_linger: float = 0.0,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0) -> dict:
     cfg = reduced(resolve_arch(arch))
@@ -55,6 +66,20 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         workload="serve", family=cfg.family, arch=cfg.name,
         shared_prefix=shared_prefix >= block_size)) if audit else None
     tracer = run_audit.tracer if run_audit else None
+
+    # live observability: metrics + event log fed from the tracer's
+    # subscription hook, exposed over HTTP while the engine runs
+    metrics = server = None
+    if metrics_port is not None:
+        if tracer is None:
+            raise ValueError("--metrics-port needs the audit tracer; "
+                             "drop --no-audit")
+        metrics = ServeMetrics()
+        metrics.attach(tracer)
+        log = EventLog()
+        tracer.subscribe(log.append)
+        server = MetricsServer(metrics.registry, log)
+        bound_port = server.serve(port=metrics_port)
     if engine == "paged":
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                block_size=block_size, chunk=chunk,
@@ -110,6 +135,18 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
             "gate_ok": diag.gate(),
             "trace": run_audit.tracer.summary()["counts"],
         }
+    if server is not None:
+        metrics.observe_report(eng.report())
+        out["metrics"] = {
+            "port": bound_port,
+            "endpoints": ["/metrics", "/metrics.json", "/events",
+                          "/healthz"],
+            "finished": metrics.finished.value,
+            "p99_ttft_bucket": metrics.ttft.quantile(0.99),
+        }
+        if metrics_linger > 0:
+            time.sleep(metrics_linger)
+        server.close()
     return out
 
 
@@ -146,6 +183,13 @@ def main() -> None:
                          "on shared-prefix workloads)")
     ap.add_argument("--no-audit", dest="audit", action="store_false",
                     help="skip runtime pathway auditing")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics, /metrics.json, /events and "
+                         "/healthz on this port while the run is live "
+                         "(0 = ephemeral; reported in the output)")
+    ap.add_argument("--metrics-linger", type=float, default=0.0,
+                    help="seconds to keep the metrics endpoint up after "
+                         "the drain completes")
     args = ap.parse_args()
     res = serve(args.arch, n_requests=args.requests,
                 slots=args.slots, max_len=args.max_len,
@@ -153,7 +197,8 @@ def main() -> None:
                 block_size=args.block_size, chunk=args.chunk,
                 shared_prefix=args.shared_prefix,
                 use_prefix_cache=args.use_prefix_cache, kernel=args.kernel,
-                audit=args.audit,
+                audit=args.audit, metrics_port=args.metrics_port,
+                metrics_linger=args.metrics_linger,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, sampling_seed=args.sampling_seed)
     print(json.dumps(res, indent=1))

@@ -14,6 +14,10 @@ request-lifecycle API.
   (prefix caching + chunked prefill), tied together by
   ``compare_engines`` — the dual-environment correctness verdict,
   greedy and sampled.
+- ``workloads``: deterministic, seedable workload-trace generator —
+  shared-prefix families (multi-tenant chat, RAG, agent loops) crossed
+  with arrival processes (uniform, bursty, diurnal, heavy-tail),
+  emitting the ``Request`` shapes ``Engine.submit`` accepts.
 """
 from repro.serve.api import (GREEDY, Engine, LaneState, RequestHandle,
                              SamplingParams, run_requests)
@@ -23,11 +27,14 @@ from repro.serve.paging import (BlockAllocator, BlockAllocatorError,
                                 DevicePageView, KVPool, PrefixCache,
                                 chain_hashes, pages_for)
 from repro.serve.scheduler import Plan, SchedEntry, Scheduler
+from repro.serve.workloads import (WorkloadSpec, WorkloadTrace, generate,
+                                   smoke_specs)
 
 __all__ = [
     "BlockAllocator", "BlockAllocatorError", "DevicePageView", "Engine",
     "GREEDY", "KVPool", "LaneState", "PrefixCache", "PagedServeEngine",
     "Plan", "Request", "RequestHandle", "SamplingParams", "SchedEntry",
-    "Scheduler", "ServeEngine", "chain_hashes", "compare_engines",
-    "pages_for", "run_requests", "token_matrix",
+    "Scheduler", "ServeEngine", "WorkloadSpec", "WorkloadTrace",
+    "chain_hashes", "compare_engines", "generate", "pages_for",
+    "run_requests", "smoke_specs", "token_matrix",
 ]

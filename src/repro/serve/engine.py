@@ -405,6 +405,7 @@ class PagedServeEngine:
                  num_blocks: int | None = None, chunk: int = 8,
                  tick_dt: float = 1.0, use_prefix_cache: bool = True,
                  admit_every: int = 1, kernel: str = "paged",
+                 preemption: bool = True,
                  tracer: Tracer | None = None):
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -460,7 +461,7 @@ class PagedServeEngine:
         # with other emitters keeps its own timestamps
         self.trace = tracer or NULL_TRACER
         self.sched = Scheduler(slots=slots, clock=lambda: self.now,
-                               tracer=self.trace)
+                               tracer=self.trace, preemption=preemption)
         self.active: dict[int, _Slot] = {}
         self.stats = EngineStats()
         self.pstats = PagedStats()
@@ -482,7 +483,8 @@ class PagedServeEngine:
                         slots=slots, max_len=max_len, block_size=block_size,
                         chunk=chunk, pages=num_blocks,
                         prefix_cache=use_prefix_cache,
-                        admit_every=admit_every, kernel=kernel)
+                        admit_every=admit_every, kernel=kernel,
+                        preemption=preemption)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request, *, arrival: float | None = None
@@ -573,9 +575,13 @@ class PagedServeEngine:
             shared=shared, private=private, registered=matched_len // bs,
             table=table)
         self.sched.mark_running(entry, slot, len(private))
+        # pages_in_use rides every occupancy-changing event so the live
+        # metrics layer can histogram pool pressure straight off the
+        # trace (deterministic: the allocator count is schedule state)
         self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
                         feed_tokens=len(feed), cached_tokens=matched_len,
-                        new_pages=len(private), shared_pages=len(shared))
+                        new_pages=len(private), shared_pages=len(shared),
+                        pages_in_use=self.alloc.in_use)
         return True
 
     def _register_blocks(self, slot: int, st: _Slot) -> None:
@@ -620,10 +626,11 @@ class PagedServeEngine:
         self.lane.clear(entry.slot)
         if self.view is not None:
             self.view.clear_slot(entry.slot)
+        self._release(st)
         self.trace.emit("preempt", rid=st.req.rid, slot=entry.slot,
                         tick=self.now, consumed=st.consumed,
-                        released_pages=len(st.shared) + len(st.private))
-        self._release(st)
+                        released_pages=len(st.shared) + len(st.private),
+                        pages_in_use=self.alloc.in_use)
         self.sched.mark_preempted(entry)
 
     def _finish(self, slot: int) -> Request:
@@ -633,9 +640,10 @@ class PagedServeEngine:
             self.view.clear_slot(slot)
         st.req.finished = True
         st.req.t_done = time.perf_counter()
-        self.trace.emit("finish", rid=st.req.rid, slot=slot, tick=self.now,
-                        tokens_out=len(st.req.out))
         self._release(st)
+        self.trace.emit("finish", rid=st.req.rid, slot=slot, tick=self.now,
+                        tokens_out=len(st.req.out),
+                        pages_in_use=self.alloc.in_use)
         self.sched.mark_done(st.entry)
         self.stats.served += 1
         return st.req
@@ -668,7 +676,8 @@ class PagedServeEngine:
         req.t_done = time.perf_counter()
         self.stats.cancelled += 1
         self.trace.emit("cancel", rid=req.rid, phase=phase, tick=self.now,
-                        released_pages=released)
+                        released_pages=released,
+                        pages_in_use=self.alloc.in_use)
         return True
 
     # --------------------------------------------------------------- step
@@ -753,6 +762,7 @@ class PagedServeEngine:
                 "step", step_kind="chunk", tick=self.now, lanes=len(lanes),
                 prefill_lanes=sum(1 for _, p in lanes if p),
                 decode_lanes=sum(1 for _, p in lanes if not p),
+                prefill_tokens=sum(n for n, p in lanes if p),
                 chunk_sizes=tuple(n for n, _ in lanes))
         nxt = np.asarray(sampled)
 
@@ -812,6 +822,7 @@ class PagedServeEngine:
             "prefix_cache": self.prefix_enabled,
             "admit_every": self.admit_every,
             "kernel": self.kernel,
+            "preemption": self.sched.preemption,
             "preemptions": self.sched.stats.preemptions,
             # worst per-program count (greedy / sampled variants each
             # bound at one compile; see ServeEngine.report)

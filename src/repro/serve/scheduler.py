@@ -67,10 +67,18 @@ class SchedStats:
 class Scheduler:
     def __init__(self, *, slots: int,
                  clock: Callable[[], float] | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 preemption: bool = True):
         self.slots = slots
         self.clock = clock or time.perf_counter
         self.trace = tracer or NULL_TRACER
+        # preemption=False models a misconfigured scheduler: no running
+        # entry is ever evicted, so a priority burst queues behind
+        # long-running work — output streams are unchanged (admission
+        # order still sorts by priority; deterministic sampling is
+        # schedule-invariant) but tail TTFT inflates under overload.
+        # The audit's quantile SLO expectations exist to catch this.
+        self.preemption = preemption
         self._seq = itertools.count()
         self.waiting: list[SchedEntry] = []
         self.running: list[SchedEntry] = []
@@ -107,7 +115,8 @@ class Scheduler:
         ready = sorted((e for e in self.waiting if e.arrival <= now),
                        key=lambda e: (-e.priority, e.seq))
         # victim pool: lowest priority first, most recent first
-        victims = sorted(self.running, key=lambda e: (e.priority, -e.seq))
+        victims = (sorted(self.running, key=lambda e: (e.priority, -e.seq))
+                   if self.preemption else [])
         for cand in ready:
             need = cost_fn(cand)
             # tentative victim picks: committed only if they buy admission

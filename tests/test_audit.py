@@ -73,6 +73,81 @@ def test_null_tracer_records_nothing():
     assert not NULL_TRACER.enabled
 
 
+def test_tracer_subscriber_sees_every_event_past_overflow():
+    """The live-metrics feed contract: a subscriber observes the complete
+    stream even after the bounded ring has evicted the early events."""
+    tr = Tracer(capacity=4, clock=lambda: 0.0)
+    seen = []
+    fn = tr.subscribe(seen.append)
+    for i in range(25):
+        tr.emit("tick", i=i)
+    assert len(tr.events()) == 4 and tr.dropped == 21  # ring wrapped...
+    assert len(seen) == 25                             # ...subscriber exact
+    assert [e.data["i"] for e in seen] == list(range(25))
+    assert [e.seq for e in seen] == list(range(25))
+    tr.unsubscribe(fn)
+    tr.emit("tick", i=99)
+    assert len(seen) == 25                 # unsubscribed: no more delivery
+    assert tr.count("tick") == 26          # counts still exact
+
+
+def test_tracer_spans_nest_across_overflow():
+    """Span closing events land in order (inner first) with exact counts
+    even when the events emitted inside the spans wrap the ring."""
+    tr = Tracer(capacity=3)
+    seen = []
+    tr.subscribe(seen.append)
+    with tr.span("outer"):
+        with tr.span("inner"):
+            for i in range(10):
+                tr.emit("tick", i=i)
+    assert tr.count("tick") == 10
+    assert tr.count("inner") == 1 and tr.count("outer") == 1
+    assert tr.dropped == 12 - 3
+    # the ring retains only the tail, but the subscriber saw everything
+    assert [e.kind for e in seen[-2:]] == ["inner", "outer"]
+    assert sum(e.kind == "tick" for e in seen) == 10
+    # the retained tail ends with the two span closings
+    assert [e.kind for e in tr.events()[-2:]] == ["inner", "outer"]
+
+
+def test_emitted_kinds_are_declared_in_known_kinds():
+    """Emit-kind lint: every ``tracer.emit("...")`` / ``tracer.span("...")``
+    string literal in ``src/`` must appear in ``KNOWN_KINDS`` — a typo'd
+    kind cannot silently create an event stream nothing subscribes to."""
+    import ast
+    from pathlib import Path
+
+    from repro.audit.trace import KNOWN_KINDS
+
+    src = Path(__file__).resolve().parent.parent / "src"
+
+    def literal_kinds(node):
+        """String constants reachable as the call's kind argument
+        (plain literals and both arms of conditional expressions)."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return [node.value]
+        if isinstance(node, ast.IfExp):
+            return literal_kinds(node.body) + literal_kinds(node.orelse)
+        return []
+
+    found = {}
+    for path in sorted(src.rglob("*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("emit", "span") and node.args):
+                for kind in literal_kinds(node.args[0]):
+                    found.setdefault(kind, []).append(
+                        f"{path.relative_to(src)}:{node.lineno}")
+    undeclared = {k: v for k, v in found.items() if k not in KNOWN_KINDS}
+    assert not undeclared, (
+        f"emit/span kinds missing from KNOWN_KINDS: {undeclared}")
+    # the lint must not be vacuous: the instrumented layers are present
+    assert len(found) >= 15, sorted(found)
+
+
 # ---------------------------------------------------------- expectations
 
 
@@ -158,6 +233,59 @@ def test_recompilation_in_hot_loop_is_flagged():
     fs = DEFAULT_REGISTRY.evaluate(
         _serve_ctx(shared_prefix=False), Evidence(tracer=tr))
     assert "pathway-recompilation" in _kinds(fs)
+
+
+def test_p99_slo_rule_fires_on_tail_and_abstains_within_bound():
+    """``pathway-slo``: the quantile expectations judge the population
+    tail from the lifecycle trace — one pathological straggler out of
+    many breaches a p99 bound the per-request max rule would also catch,
+    but a *fleet-wide* bound set above the healthy p99 stays silent."""
+    from repro.audit.expectations import nearest_rank
+
+    def traced_run(ttfts):
+        tr = Tracer(clock=lambda: 0.0)
+        for rid, ttft in enumerate(ttfts):
+            tr.emit("submit", rid=rid, arrival=0.0)
+            tr.emit("first-token", rid=rid, tick=float(ttft),
+                    ttft_ticks=float(ttft))
+            # 5 tokens over 8 ticks after the first: gap 2.0 each
+            tr.emit("finish", rid=rid, tick=float(ttft) + 8.0, tokens_out=5)
+        return Evidence(tracer=tr)
+
+    ttfts = [2.0] * 19 + [40.0]            # p99 == the straggler
+    assert nearest_rank(ttfts, 0.99) == 40.0
+
+    def reg(**sig):
+        return ExpectationRegistry([Rule(
+            "slo", ExpectedSignature(**sig), workloads=("serve",))])
+
+    fs = reg(p99_ttft_ticks=10.0).evaluate(_serve_ctx(), traced_run(ttfts))
+    assert _kinds(fs) == {"pathway-slo"}
+    assert all(f["severity"] == "error" for f in fs)
+    # bound above the tail: clean
+    assert reg(p99_ttft_ticks=50.0).evaluate(
+        _serve_ctx(), traced_run(ttfts)) == []
+    # decode-gap SLO over the same evidence (every gap is 2.0 ticks)
+    assert reg(p99_decode_gap_ticks=1.5).evaluate(
+        _serve_ctx(), traced_run(ttfts)) != []
+    assert reg(p99_decode_gap_ticks=2.0).evaluate(
+        _serve_ctx(), traced_run(ttfts)) == []
+    # no lifecycle evidence -> the check is skipped, not failed
+    assert reg(p99_ttft_ticks=1.0).evaluate(
+        _serve_ctx(), Evidence(tracer=Tracer())) == []
+
+
+def test_nearest_rank_is_the_ceil_rank_order_statistic():
+    from repro.audit.expectations import nearest_rank
+
+    assert nearest_rank([3.0, 1.0, 2.0], 0.5) == 2.0
+    assert nearest_rank([3.0, 1.0, 2.0], 1.0) == 3.0
+    assert nearest_rank([7.0], 0.99) == 7.0
+    assert nearest_rank(list(range(100)), 0.99) == 98  # ceil(99) = 99th
+    with pytest.raises(ValueError, match="empty"):
+        nearest_rank([], 0.5)
+    with pytest.raises(ValueError, match="quantile"):
+        nearest_rank([1.0], 0.0)
 
 
 def test_non_moe_train_must_not_emit_expert_dispatch():
@@ -259,6 +387,78 @@ def test_ledger_history_is_bounded(tmp_path):
         led.compare("b", {"x": 1.0}, [MetricSpec("x")])
     rec = led.load("b")
     assert len(rec["history"]) == HISTORY_KEEP
+
+
+def test_ledger_orphan_audit_flags_unowned_bench_files(tmp_path):
+    """``audit_owned``: a BENCH file whose benchmark is not registered is
+    an error — a baseline nobody maintains silently attests metrics
+    nothing measures."""
+    led = Ledger(tmp_path)
+    led.compare("serve_throughput_smoke", {"x": 1.0}, [MetricSpec("x")])
+    assert led.audit_owned(["serve_throughput_smoke"]) == []
+
+    # a stray ledger from a deleted benchmark
+    led.compare("serve_tiering_smoke", {"y": 2.0}, [MetricSpec("y")])
+    [f] = led.audit_owned(["serve_throughput_smoke"])
+    assert f["kind"] == "ledger-orphan" and f["severity"] == "error"
+    assert "serve_tiering_smoke" in f["detail"]
+
+    # unparseable files are judged by filename, not skipped
+    (tmp_path / "BENCH_mystery.json").write_text("{not json")
+    kinds = [f["kind"] for f in led.audit_owned(["serve_throughput_smoke",
+                                                 "serve_tiering_smoke"])]
+    assert kinds == ["ledger-orphan"]
+
+
+def test_smoke_all_gate_fails_on_orphan_ledger(tmp_path):
+    """The harness-level proof: ``scripts/smoke_all.py``'s owned-key set
+    plus ``Diagnostics.gate()`` turns an unowned BENCH file into a
+    failing gate."""
+    import importlib.util
+    import os
+
+    from repro.core.diagnostics import Diagnostics
+
+    spec = importlib.util.spec_from_file_location(
+        "smoke_all", os.path.join(os.path.dirname(__file__), os.pardir,
+                                  "scripts", "smoke_all.py"))
+    smoke_all = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(smoke_all)
+
+    owned = smoke_all.owned_ledger_keys()
+    assert {"serve_throughput_smoke", "audit_pathways_full",
+            "serve_workloads_smoke"} <= set(owned)
+
+    led = Ledger(tmp_path)
+    for key in owned:                       # everything owned: gate passes
+        led.compare(key, {"x": 1.0}, [MetricSpec("x")])
+    diag = Diagnostics()
+    diag.extend(led.audit_owned(owned), source="ledger-integrity")
+    assert diag.gate()
+
+    led.compare("serve_tiering_smoke", {"y": 1.0}, [MetricSpec("y")])
+    diag = Diagnostics()
+    diag.extend(led.audit_owned(owned), source="ledger-integrity")
+    assert not diag.gate()
+
+
+def test_ledger_rolling_median_over_history(tmp_path):
+    led = Ledger(tmp_path)
+    assert led.rolling_median("b", "wall_s") is None    # no ledger at all
+    for v in [10.0, 30.0, 20.0]:
+        led.compare("b", {"x": 1.0, "wall_s": v},
+                    [MetricSpec("x"), MetricSpec("wall_s", gate=False)])
+    trend = led.rolling_median("b", "wall_s")
+    assert trend == {"median": 20.0, "n": 3, "latest": 20.0}
+    # even-length window averages the middle pair
+    led.compare("b", {"x": 1.0, "wall_s": 100.0},
+                [MetricSpec("x"), MetricSpec("wall_s", gate=False)])
+    assert led.rolling_median("b", "wall_s")["median"] == 25.0
+    # the window slides: only the most recent entries count
+    assert led.rolling_median("b", "wall_s", window=2) == {
+        "median": 60.0, "n": 2, "latest": 100.0}
+    # a metric history never carried -> None, not a crash
+    assert led.rolling_median("b", "nope") is None
 
 
 # ------------------------------------------------------- compile watcher

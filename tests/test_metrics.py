@@ -1,0 +1,291 @@
+"""Live metrics layer: registry semantics, the Tracer→ServeMetrics
+binding, the structured event log, the pure HTTP routing contract, and
+the end-to-end determinism bar — same seed + same trace ⇒ byte-identical
+``/metrics`` exposition, no port bound."""
+import json
+
+import pytest
+
+from repro.audit.metrics import (GAP_BUCKETS, EventLog, Gauge, Histogram,
+                                 MetricsRegistry, MetricsServer,
+                                 ServeMetrics, query_jsonl)
+from repro.audit.trace import TraceEvent, Tracer
+
+
+# ------------------------------------------------------------ primitives
+
+
+def test_counter_is_monotonic():
+    r = MetricsRegistry()
+    c = r.counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="negative"):
+        c.inc(-1)
+
+
+def test_histogram_buckets_and_nearest_rank_quantiles():
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    assert h.quantile(0.5) is None                    # empty: no estimate
+    for v in (0.5, 1.0, 3.0, 9.0):
+        h.observe(v)
+    # bisect_left: a value equal to an edge lands in that edge's bucket
+    assert h.counts == [2, 0, 1, 1]                   # last is +Inf
+    assert h.sum == 13.5 and h.count == 4
+    assert h.quantile(0.5) == 1.0
+    # tail observations clamp to the last finite edge, never invented
+    assert h.quantile(1.0) == 4.0
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+    snap = h.snapshot()
+    assert snap["buckets"] == {"1": 2, "2": 2, "4": 3}
+    assert snap["inf"] == 4 and snap["p99"] == 4.0
+    with pytest.raises(ValueError, match="increasing"):
+        Histogram("bad", buckets=(2.0, 1.0))
+
+
+def test_registry_is_idempotent_and_typed():
+    r = MetricsRegistry()
+    a = r.counter("x")
+    assert r.counter("x") is a                        # same instance back
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("x")
+    assert isinstance(r.get("x"), type(a))
+    with pytest.raises(KeyError):
+        r.get("missing")
+
+
+def test_prometheus_render_is_sorted_and_deterministic():
+    r = MetricsRegistry()
+    r.gauge("z_gauge", "last").set(2)
+    r.counter("a_total", "first").inc(3)
+    r.histogram("m_hist", buckets=(1.0, 2.0)).observe(1.5)
+    text = r.render_prometheus()
+    assert text == r.render_prometheus()              # pure render
+    assert text.index("a_total") < text.index("m_hist") < text.index("z_gauge")
+    assert "# TYPE a_total counter\na_total 3\n" in text
+    assert 'm_hist_bucket{le="2"} 1' in text
+    assert 'm_hist_bucket{le="+Inf"} 1' in text
+    snap = r.snapshot()
+    assert snap["counters"] == {"a_total": 3.0}
+    assert snap["gauges"] == {"z_gauge": 2.0}
+    assert snap["histograms"]["m_hist"]["count"] == 1
+
+
+# ------------------------------------------------------------- event log
+
+
+def _ev(seq, kind, **data):
+    return TraceEvent(seq=seq, t=float(seq), kind=kind, data=data)
+
+
+def test_event_log_query_filters_and_limit():
+    log = EventLog()
+    log.append(_ev(0, "submit", rid=0, tick=0.0))
+    log.append(_ev(1, "first-token", rid=0, tick=3.0))
+    log.append(_ev(2, "submit", rid=1, tick=4.0))
+    log.append(_ev(3, "finish", rid=0, tick=9.0))
+    assert len(log) == 4
+    assert [r["rid"] for r in log.query(kind="submit")] == [0, 1]
+    assert [r["kind"] for r in log.query(rid=0)] == [
+        "submit", "first-token", "finish"]
+    assert [r["seq"] for r in log.query(tick_min=3.0, tick_max=4.0)] == [1, 2]
+    assert [r["seq"] for r in log.query(limit=2)] == [2, 3]  # recent wins
+
+
+def test_event_log_is_bounded():
+    log = EventLog(capacity=3)
+    for i in range(10):
+        log.append(_ev(i, "tick"))
+    assert [r["seq"] for r in log.query()] == [7, 8, 9]
+
+
+def test_event_log_jsonl_roundtrip(tmp_path):
+    log = EventLog()
+    log.append(_ev(0, "submit", rid=0, tick=0.0))
+    log.append(_ev(1, "finish", rid=0, tick=5.0))
+    text = log.dumps()
+    assert text == log.dumps(kind=None)               # no-filter == full
+    assert [json.loads(l)["kind"] for l in text.splitlines()] == [
+        "submit", "finish"]
+    p = tmp_path / "events.jsonl"
+    assert log.dump(p) == 2
+    # a dumped log answers the same queries the live one does
+    recs = query_jsonl(p.read_text().splitlines(), kind="finish")
+    assert [r["tick"] for r in recs] == [5.0]
+    assert query_jsonl(["", "  "], rid=1) == []
+
+
+# --------------------------------------------- ServeMetrics event binding
+
+
+def test_serve_metrics_maps_lifecycle_events():
+    tr = Tracer(clock=lambda: 0.0)
+    m = ServeMetrics()
+    m.attach(tr)
+    tr.emit("engine-init", engine="paged", pages=10)
+    tr.emit("submit", rid=0, tick=0.0)
+    tr.emit("admit", rid=0, cached_tokens=8, pages_in_use=5)
+    tr.emit("step", lanes=2, prefill_tokens=4)
+    tr.emit("first-token", rid=0, tick=3.0, ttft_ticks=3.0)
+    tr.emit("finish", rid=0, tick=11.0, tokens_out=5, pages_in_use=0)
+    tr.emit("preempt", rid=1, pages_in_use=2)
+    tr.emit("cancel", rid=1, pages_in_use=0)
+    tr.emit("compile", fn="decode_chunk")
+
+    assert m.submitted.value == 1 and m.finished.value == 1
+    assert m.cancelled.value == 1 and m.preemptions.value == 1
+    assert m.recompiles.value == 1
+    assert m.tokens_out.value == 5 and m.cached_tokens.value == 8
+    assert m.prefill_tokens.value == 4
+    assert m.prefix_hit_rate.value == pytest.approx(8 / 12)
+    assert m.pages_total.value == 10 and m.active_lanes.value == 2
+    assert m.steps.value == 1
+    assert m.ttft.count == 1 and m.ttft.quantile(0.5) == 4.0
+    # mean gap (11 - 3) / (5 - 1) = 2.0 ticks
+    assert m.gap.count == 1 and m.gap.sum == 2.0
+    # occupancy sampled at admit/finish/preempt/cancel: 0.5, 0, 0.2, 0
+    assert m.occupancy.count == 4
+    assert m.occupancy.sum == pytest.approx(0.7)
+    # pending first-token state is cleared on finish/cancel
+    assert m._first_tick == {}
+
+
+def test_serve_metrics_observe_report_folds_exact_counters():
+    m = ServeMetrics()
+    tr = Tracer(clock=lambda: 0.0)
+    m.attach(tr)
+    tr.emit("admit", rid=0, cached_tokens=6)
+    tr.emit("step", lanes=1, prefill_tokens=4)
+    # the report's lifetime counter wins when larger; never decrements
+    m.observe_report({"prefill_tokens": 10})
+    assert m.prefill_tokens.value == 10
+    assert m.prefix_hit_rate.value == pytest.approx(6 / 16)
+    m.observe_report({"prefill_tokens": 7})
+    assert m.prefill_tokens.value == 10
+
+
+# --------------------------------------------------------- HTTP routing
+
+
+def _server_with_log():
+    m = ServeMetrics()
+    log = EventLog()
+    log.append(_ev(0, "submit", rid=0, tick=0.0))
+    log.append(_ev(1, "finish", rid=0, tick=5.0))
+    return MetricsServer(m.registry, log)
+
+
+def test_handle_routes_metrics_and_events_without_a_port():
+    srv = _server_with_log()
+    status, ctype, body = srv.handle("/metrics")
+    assert status == 200 and ctype.startswith("text/plain")
+    assert b"# TYPE serve_requests_submitted_total counter" in body
+
+    status, ctype, body = srv.handle("/metrics.json")
+    assert status == 200 and ctype == "application/json"
+    snap = json.loads(body)
+    assert "serve_ttft_ticks" in snap["histograms"]
+    assert srv.handle("/metrics?format=json")[2] == body
+    assert srv.handle("/metrics/")[:2] == (200, "text/plain; version=0.0.4")
+
+    status, _, body = srv.handle("/events?kind=finish&limit=5")
+    assert status == 200
+    assert [json.loads(l)["kind"] for l in body.splitlines()] == ["finish"]
+    body = srv.handle("/events?rid=0&tick_min=1")[2]
+    [rec] = [json.loads(l) for l in body.splitlines()]
+    assert rec["kind"] == "finish"
+
+    assert srv.handle("/healthz") == (200, "application/json",
+                                      b'{"ok": true}\n')
+    assert srv.handle("/events?rid=abc")[0] == 400       # bad filter value
+    assert srv.handle("/nope")[0] == 404
+    assert MetricsServer(MetricsRegistry()).handle("/events")[0] == 404
+
+
+def test_server_binds_and_serves_over_http():
+    from urllib.request import urlopen
+
+    srv = _server_with_log()
+    port = srv.serve(port=0)                    # ephemeral
+    assert srv.port == port
+    try:
+        with urlopen(f"http://127.0.0.1:{port}/healthz", timeout=5) as r:
+            assert json.load(r)["ok"] is True
+        with urlopen(f"http://127.0.0.1:{port}/metrics", timeout=5) as r:
+            assert r.read() == srv.handle("/metrics")[2]
+    finally:
+        srv.close()
+    assert srv.port is None
+
+
+# -------------------------------------------- scheduler preemption knob
+
+
+def test_scheduler_preemption_disabled_plans_no_victims():
+    from repro.serve.scheduler import Plan, Scheduler
+
+    def loaded(preemption):
+        sched = Scheduler(slots=1, clock=lambda: 10.0,
+                          preemption=preemption)
+        low = sched.submit(object(), priority=0, arrival=0.0)
+        sched.mark_running(low, slot=0, held_pages=4)
+        sched.submit(object(), priority=2, arrival=1.0)
+        return sched.schedule(free_slots=0, free_pages=0,
+                              cost_fn=lambda e: 2)
+
+    plan = loaded(preemption=True)
+    assert len(plan.preempt) == 1 and len(plan.admit) == 1
+    plan = loaded(preemption=False)
+    assert isinstance(plan, Plan)
+    assert plan.preempt == [] and plan.admit == []    # burst queues behind
+
+
+# --------------------------------------------------- end-to-end bit bar
+
+
+@pytest.mark.slow
+def test_metrics_exposition_is_byte_identical_for_same_seed_and_trace():
+    """The acceptance bar: two independent engines fed the same generated
+    trace render byte-identical ``/metrics`` (text and JSON), via the
+    pure ``handle()`` contract — no port bound anywhere."""
+    import jax
+
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import PagedServeEngine
+    from repro.serve.workloads import WorkloadSpec, generate
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    trace = generate(WorkloadSpec(
+        name="bit-bar", family="chat", arrival="bursty", n_requests=6,
+        vocab_size=cfg.vocab_size, seed=13, max_new=4, prefix_len=8,
+        n_streams=2, suffix_lo=2, suffix_hi=4, burst_size=3,
+        burst_gap=8.0, priorities=(0, 1)))
+
+    def run_once():
+        tracer = Tracer()
+        metrics = ServeMetrics()
+        metrics.attach(tracer)
+        log = EventLog()
+        tracer.subscribe(log.append)
+        eng = PagedServeEngine(model, params, slots=2, max_len=48,
+                               block_size=8, chunk=4, tracer=tracer)
+        eng.run(trace.requests(), arrivals=trace.arrivals)
+        metrics.observe_report(eng.report())
+        srv = MetricsServer(metrics.registry, log)
+        return (srv.handle("/metrics")[2], srv.handle("/metrics.json")[2],
+                srv.handle("/events?kind=finish")[2])
+
+    a, b = run_once(), run_once()
+    assert a[0] == b[0]                        # Prometheus text, bytes
+    assert a[1] == b[1]                        # JSON snapshot, bytes
+    # the event streams agree on everything but the wall-clock stamp
+    strip = lambda body: [
+        {k: v for k, v in json.loads(l).items() if k != "t"}
+        for l in body.splitlines()]
+    assert strip(a[2]) == strip(b[2])
+    assert len(strip(a[2])) == 6               # every request finished

@@ -1,0 +1,183 @@
+"""Workload-trace generator: determinism, shared-prefix family
+structure, arrival-process shapes, and the Request-minting contract the
+serving engines and ``compare_engines`` consume."""
+import dataclasses
+
+import pytest
+
+from repro.serve.api import SamplingParams
+from repro.serve.workloads import (ARRIVALS, FAMILIES, WorkloadSpec,
+                                   generate, smoke_specs)
+
+
+def spec(**kw):
+    defaults = dict(name="t", family="chat", arrival="uniform",
+                    n_requests=12, vocab_size=50, seed=3, max_new=4,
+                    prefix_len=8, n_streams=3, suffix_lo=2, suffix_hi=5)
+    defaults.update(kw)
+    return WorkloadSpec(**defaults)
+
+
+# ---------------------------------------------------------- determinism
+
+
+def test_same_spec_generates_identical_trace():
+    for family in FAMILIES:
+        for arrival in ARRIVALS:
+            s = spec(family=family, arrival=arrival)
+            a, b = generate(s), generate(s)
+            assert a.prompts == b.prompts, (family, arrival)
+            assert a.arrivals == b.arrivals, (family, arrival)
+            assert a.priorities == b.priorities, (family, arrival)
+
+
+def test_seed_changes_prompts_and_arrivals():
+    a = generate(spec(arrival="heavy-tail"))
+    b = generate(spec(arrival="heavy-tail", seed=4))
+    assert a.prompts != b.prompts
+    assert a.arrivals != b.arrivals
+
+
+def test_tokens_never_alias_the_pad_id():
+    for family in FAMILIES:
+        tr = generate(spec(family=family, vocab_size=5))
+        assert all(1 <= t < 5 for p in tr.prompts for t in p), family
+
+
+# -------------------------------------------------- family prefix shapes
+
+
+def test_chat_family_shares_prefix_per_tenant():
+    s = spec(family="chat", n_requests=9, n_streams=3)
+    tr = generate(s)
+    systems = [p[:s.prefix_len] for p in tr.prompts[:3]]
+    assert len({tuple(x) for x in systems}) == 3      # tenants distinct
+    for i, p in enumerate(tr.prompts):
+        assert p[:s.prefix_len] == systems[i % 3]     # cycled per-tenant
+        assert s.suffix_lo <= len(p) - s.prefix_len <= s.suffix_hi
+
+
+def test_rag_family_shares_one_global_context():
+    s = spec(family="rag", prefix_len=16)
+    tr = generate(s)
+    ctx = tr.prompts[0][:16]
+    assert all(p[:16] == ctx for p in tr.prompts)
+    assert tr.shared_prefix_stats()["reuse_frac"] > 0.5
+
+
+def test_agent_family_grows_round_robin_by_turn():
+    """Prompt order is (agent0 t0, agent1 t0, ..., agent0 t1, ...) and
+    each turn's prompt extends that agent's previous turn exactly — so
+    nondecreasing arrivals never request turn k before its turn k-1."""
+    s = spec(family="agent", n_requests=12, n_streams=3, prefix_len=6)
+    tr = generate(s)
+    for i, p in enumerate(tr.prompts):
+        turn, agent = divmod(i, 3)
+        assert len(p) == 6 + turn * s.grow
+        if turn:
+            prev = tr.prompts[(turn - 1) * 3 + agent]
+            assert p[:len(prev)] == prev
+
+
+def test_agent_trace_truncates_to_n_requests():
+    tr = generate(spec(family="agent", n_requests=7, n_streams=3, turns=4))
+    assert tr.n_requests == 7
+
+
+# ------------------------------------------------------------- arrivals
+
+
+def test_arrival_ticks_are_nondecreasing_for_every_process():
+    for arrival in ARRIVALS:
+        tr = generate(spec(arrival=arrival, n_requests=40))
+        assert all(b >= a for a, b in zip(tr.arrivals, tr.arrivals[1:])), (
+            arrival)
+        assert all(t >= 0 for t in tr.arrivals)
+
+
+def test_uniform_arrivals_are_fixed_gaps():
+    tr = generate(spec(arrival="uniform", mean_gap=3.0, n_requests=4))
+    assert tr.arrivals == [3.0, 6.0, 9.0, 12.0]
+
+
+def test_bursty_arrivals_cluster_between_quiet_gaps():
+    s = spec(arrival="bursty", n_requests=12, burst_size=4, burst_gap=30.0)
+    gaps = [b - a for a, b in zip([0.0] + generate(s).arrivals,
+                                  generate(s).arrivals)]
+    heads = [g for i, g in enumerate(gaps) if i % 4 == 0 and i]
+    members = [g for i, g in enumerate(gaps) if i % 4 != 0 or not i]
+    assert all(g == 30.0 for g in heads)      # quiet period between bursts
+    assert all(g < 1.0 for g in members)      # near-simultaneous inside
+
+
+# ---------------------------------------------------- spec + trace API
+
+
+def test_spec_validation_rejects_bad_fields():
+    with pytest.raises(ValueError, match="family"):
+        spec(family="batch")
+    with pytest.raises(ValueError, match="arrival"):
+        spec(arrival="poissonish")
+    with pytest.raises(ValueError, match="n_requests"):
+        spec(n_requests=0)
+    with pytest.raises(ValueError, match="vocab_size"):
+        spec(vocab_size=1)
+    with pytest.raises(ValueError, match="suffix_lo"):
+        spec(suffix_lo=0)
+    with pytest.raises(ValueError, match="turns"):
+        spec(family="agent", turns=0)
+    with pytest.raises(ValueError, match="priorities"):
+        spec(priorities=())
+
+
+def test_max_prompt_len_bounds_every_generated_prompt():
+    for family in FAMILIES:
+        s = spec(family=family)
+        tr = generate(s)
+        longest = max(len(p) for p in tr.prompts)
+        assert longest <= s.max_prompt_len, family
+        assert tr.max_feed == longest + s.max_new
+
+
+def test_requests_are_fresh_per_call_with_rid_and_priority():
+    s = spec(priorities=(0, 2))
+    tr = generate(s)
+    a, b = tr.requests(), tr.requests()
+    assert [r.rid for r in a] == list(range(s.n_requests))
+    assert [r.priority for r in a] == [0, 2] * (s.n_requests // 2)
+    assert all(x is not y for x, y in zip(a, b))       # engines mutate
+    assert all(x.prompt == y.prompt and x.prompt is not y.prompt
+               for x, y in zip(a, b))
+    assert all(r.sampling is None for r in a)          # greedy by default
+
+
+def test_sampled_spec_carries_deterministic_sampling_params():
+    s = spec(temperature=0.7, top_k=10, seed=9)
+    [r, *_] = generate(s).requests()
+    assert isinstance(r.sampling, SamplingParams)
+    assert r.sampling.temperature == 0.7 and r.sampling.top_k == 10
+    assert r.sampling.seed == 9
+    assert spec(temperature=0.0).sampling is None
+
+
+def test_spec_is_frozen_and_usable_as_a_cache_key():
+    s = spec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.seed = 1
+    assert hash(spec()) == hash(spec())
+
+
+# ------------------------------------------------------ canonical suite
+
+
+def test_smoke_specs_cover_families_and_fit_the_smoke_engine():
+    specs = smoke_specs(vocab_size=50, seed=0)
+    assert sorted(s.family for s in specs) == sorted(FAMILIES)
+    assert len({s.name for s in specs}) == len(specs)
+    assert len({s.arrival for s in specs}) == len(specs)
+    for s in specs:
+        tr = generate(s)
+        assert tr.max_feed <= 64, s.name          # smoke engine max_len
+        assert tr.shared_prefix_stats()["reuse_frac"] > 0.4, s.name
+        d = tr.describe()
+        assert d["workload"] == s.name and d["n_requests"] == s.n_requests
