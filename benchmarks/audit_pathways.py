@@ -2,7 +2,7 @@
 
 ``compare_engines`` proves two serving pathways emit identical token
 streams (greedy and sampled) — it is blind to *how* they got there.
-This benchmark seeds five misconfigurations that keep outputs
+This benchmark seeds misconfigurations that keep outputs
 token-identical while degrading the pathway (the paper's "suboptimal
 transport pathway" class, §8), and asserts the audit pipeline flags each
 as an error:
@@ -29,7 +29,15 @@ as an error:
      the healthy streams) but the burst's tail TTFT explodes — caught
      by the registry's *quantile* SLO expectations (``pathway-slo``),
      calibrated from a healthy preemption-on run of the same
-     generated bursty trace.
+     generated bursty trace;
+  7. random routing on a 3-replica cluster: counter-based sampling is
+     placement-independent, so scattering a shared-prefix chat trace
+     uniformly across replicas keeps every stream bit-identical to the
+     prefix-affine run — while ``routed_affinity`` collapses toward
+     1/replicas and the cluster-wide prefix hit rate drops (each
+     replica recomputes prefixes a sibling already holds).  Caught by
+     ``pathway-routing`` floors calibrated from the healthy affinity
+     run of the same trace.
 
 A request-lifecycle probe additionally runs sampled + cancelled requests
 through the audited pathway and gates on their events being visible in
@@ -76,7 +84,14 @@ SEEDS = {
     "disabled-prefix-cache": "pathway-prefix-cache",
     "slow-admission": "pathway-ttft",
     "bursty-overload-no-preemption": "pathway-slo",
+    "random-routing": "pathway-routing",
 }
+
+#: Routing floors as fractions of the healthy affinity run's values
+#: (deterministic tick-clock runs: the margins separate affinity from
+#: uniform-random over 3 replicas, they do not absorb noise).
+AFFINITY_FLOOR_FRAC = 0.8
+SHARED_HIT_FLOOR_FRAC = 0.85
 
 #: Slow-admission seed: scheduler consulted every N-th tick only.
 ADMIT_EVERY = 8
@@ -315,6 +330,85 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
             "severity": "error", "kind": "audit-seed-uncontrasted",
             "detail": "bursty-overload trace never triggered preemption "
                       "in the healthy run: the seed contrasts nothing"})
+
+    # --------------------- seed 7: random routing on a 3-replica cluster.
+    # The same multi-tenant chat trace (shared prefixes + arrivals spread
+    # over ticks, so later requests route against warm summaries) run
+    # twice: prefix-affinity routing calibrates the ``pathway-routing``
+    # floors; uniform-random routing must stay token-identical yet breach
+    # them — the misconfiguration no output check can see.
+    from repro.serve import ClusterEngine, smoke_specs
+
+    cl_spec = smoke_specs(vocab_size=cfg.vocab_size, seed=seed)[0]  # chat
+    cl_trace = generate(cl_spec)
+    cl_geom = dict(slots=2, max_len=48, block_size=8, chunk=4)
+    CL_MAX_NEW = 4
+
+    def cl_requests():
+        reqs = cl_trace.requests()
+        for r in reqs:
+            r.max_new = CL_MAX_NEW
+        return reqs
+
+    def cl_run(routing: str):
+        a = RunAudit(_ctx(cfg))
+        e = ClusterEngine(model, params, replicas=3, routing=routing,
+                          routing_seed=seed + 11, tracer=a.tracer,
+                          **cl_geom)
+        d = e.run(cl_requests(), arrivals=list(cl_trace.arrivals))
+        return a, e, token_matrix(d, cl_spec.n_requests, CL_MAX_NEW)
+
+    cl_audit, cl_eng, cl_tokens = cl_run("affinity")
+    cl_rep = cl_eng.report()
+    routing_rule = Rule(
+        name="bench-cluster-routing", families=("dense", "moe"),
+        workloads=("bench:audit_pathways",),
+        expect=ExpectedSignature(
+            min_routed_affinity=AFFINITY_FLOOR_FRAC
+            * cl_rep["routed_affinity"],
+            min_shared_hit_rate=SHARED_HIT_FLOOR_FRAC
+            * cl_rep["shared_hit_rate"]))
+    cl_audit.registry.register(routing_rule)
+    cl_healthy = cl_audit.evaluate(engine_report=cl_rep)
+    findings.extend(cl_healthy)     # calibrated on itself: must be clean
+
+    s_audit, s_eng, s_tokens = cl_run("random")
+    s_audit.registry.register(routing_rule)
+    s_rep = s_eng.report()
+    s_findings = s_audit.evaluate(engine_report=s_rep)
+    name = "random-routing"
+    hit = [f for f in s_findings
+           if f["kind"] == SEEDS[name] and f["severity"] == "error"]
+    token_identical = bool((s_tokens == cl_tokens).all())
+    detections[name] = {
+        "detected": bool(hit),
+        "expected_kind": SEEDS[name],
+        "findings": s_findings,
+        "token_identical": token_identical,
+        "healthy_affinity": cl_rep["routed_affinity"],
+        "seeded_affinity": s_rep["routed_affinity"],
+        "healthy_shared_hit": cl_rep["shared_hit_rate"],
+        "seeded_shared_hit": s_rep["shared_hit_rate"],
+        "affine_opportunities": cl_rep["affine_opportunities"],
+    }
+    if not hit:
+        findings.append({
+            "severity": "error", "kind": "audit-detector-miss",
+            "detail": f"seeded misconfiguration {name!r} was not flagged "
+                      f"as {SEEDS[name]} "
+                      f"(got {[f['kind'] for f in s_findings]})"})
+    if not token_identical:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-divergence",
+            "detail": f"seeded misconfiguration {name!r} changed the "
+                      f"token stream — it must degrade the pathway, "
+                      f"not the answer"})
+    if cl_rep["affine_opportunities"] == 0:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-uncontrasted",
+            "detail": "chat trace offered the cluster router no affinity "
+                      "opportunity in the healthy run: the seed "
+                      "contrasts nothing"})
 
     # ------------------------------------ request-lifecycle probe: the
     # cancel and sampling pathways must be *visible* in the audit trace

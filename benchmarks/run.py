@@ -20,6 +20,7 @@ SUITES = [
     ("serve_throughput", "benchmarks.serve_throughput"),  # paged serving
     ("audit_pathways", "benchmarks.audit_pathways"),  # runtime audit gate
     ("serve_workloads", "benchmarks.serve_workloads"),  # workload-family SLOs
+    ("serve_cluster", "benchmarks.serve_cluster"),  # replica scaling + routing
 ]
 
 

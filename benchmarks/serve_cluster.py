@@ -1,0 +1,274 @@
+"""Cluster scaling benchmark: replica sweep under routing verification.
+
+The single-host benchmarks prove the paged engine takes the optimal
+pathway; this one climbs a layer and judges the *cluster router*
+(``repro.serve.cluster``) the same way, in the scaling-verification
+discipline of the EBRAINS container study (OSU/NCCL-style ``r_max``):
+
+Per PR 5 workload family (multi-tenant chat, RAG, agent loops):
+
+  1. ``compare_engines`` cluster mode — ``ClusterEngine(n=1)`` and
+     ``ClusterEngine(n=3)`` must be token-exact against the single paged
+     engine, greedy AND sampled (counter-based sampling is placement-
+     independent, so ANY routing that preserves requests whole must
+     reproduce the single-engine streams bit for bit);
+  2. a replica sweep (n = 1, 2, 3) of metered affinity-routed runs over
+     the family's trace with its arrival ticks — each replica's tracer
+     feeds a replica-labelled ``ServeMetrics`` into one shared registry
+     behind one ``MetricsServer`` (the aggregation ``launch.serve
+     --replicas`` exposes over HTTP);
+  3. scaling + routing judgement on deterministic tick-clock counters:
+     ``scaling_rmax`` (peak tokens-per-tick across the sweep, r_max in
+     the OSU sense), ``routed_affinity`` (fraction of affinity
+     opportunities the router converted) and ``shared_hit_rate``
+     (cluster-wide prefix reuse) at n=3, all ledgered into
+     ``BENCH_serve_cluster_smoke.json`` with tight bands; wall-clock
+     throughput rides along ungated (trajectory only).
+
+    PYTHONPATH=src python benchmarks/serve_cluster.py [--smoke]
+        [--ledger-dir DIR] [--update-baseline]
+
+Prints one JSON object on the last line; ``findings`` carries the
+diagnostics records scripts/smoke_all.py folds into the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+
+#: Replica counts swept per family (n=1 doubles as the degenerate-router
+#: sanity point: one replica, affinity vacuously perfect).
+REPLICA_SWEEP = (1, 2, 3)
+
+#: Replica counts held to the token-identity oracle, greedy and sampled.
+ORACLE_REPLICAS = (1, 3)
+
+#: Per-replica engine geometry (every replica runs the serve_workloads
+#: geometry, so per-replica capacity is constant and the sweep scales
+#: total capacity linearly).
+GEOMETRY = {"slots": 3, "max_len": 64, "block_size": 8, "chunk": 4}
+
+
+def _ctx(cfg):
+    from repro.audit import AuditContext
+
+    return AuditContext(workload="bench:serve_cluster", family=cfg.family,
+                        arch=cfg.name, shared_prefix=True)
+
+
+def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
+          ledger_dir: str | None = None,
+          update_baseline: bool = False) -> dict:
+    from repro.audit import (EventLog, Ledger, MetricSpec, MetricsRegistry,
+                             MetricsServer, RunAudit, ServeMetrics, Tracer)
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve import (ClusterEngine, SamplingParams, compare_engines,
+                             generate, smoke_specs)
+
+    mode = "smoke" if smoke else "full"
+    cfg = reduced(ALL_ARCHS[arch])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    specs = smoke_specs(vocab_size=cfg.vocab_size, seed=seed)
+    g = GEOMETRY
+    sampled = SamplingParams(temperature=0.8, top_k=20, top_p=0.95,
+                             seed=seed + 1)
+
+    findings: list[dict] = []
+    families = []
+    ledger_metrics: dict[str, float] = {}
+    rmaxes, affinities, shared_hits = [], [], []
+
+    for spec in specs:
+        trace = generate(spec)
+        assert trace.max_feed <= g["max_len"], (spec.name, trace.max_feed)
+
+        # ---- 1. routing oracle: the cluster must reproduce the single
+        # paged engine's streams exactly, at n=1 and n=3, greedy & sampled
+        oracle_ok = True
+        for n in ORACLE_REPLICAS:
+            for sname, sp in (("greedy", None), ("sampled", sampled)):
+                verify = compare_engines(
+                    model, params, trace.requests, slots=g["slots"],
+                    max_len=g["max_len"], block_size=g["block_size"],
+                    chunk=g["chunk"], sampling=sp,
+                    cluster={"replicas": n})
+                oracle_ok = oracle_ok and verify.ok
+                for v in verify.verdicts:
+                    if not v.ok:
+                        findings.append({
+                            "severity": "error",
+                            "kind": f"cluster-oracle-{spec.name}-n{n}-{sname}",
+                            "detail": v.detail})
+
+        # ---- 2. replica sweep: metered affinity-routed runs, one shared
+        # metrics registry with replica-labelled series per run
+        sweep = []
+        fam_rmax = 0.0
+        fam_affinity = fam_shared = None
+        for n in REPLICA_SWEEP:
+            audit = RunAudit(_ctx(cfg))
+            registry = MetricsRegistry()
+            log = EventLog()
+            audit.tracer.subscribe(log.append)
+            cluster_metrics = ServeMetrics(registry)    # router's own view
+            cluster_metrics.attach(audit.tracer)
+            replica_tracers = [Tracer() for _ in range(n)]
+            replica_metrics = []
+            for i, rt in enumerate(replica_tracers):
+                sm = ServeMetrics(registry, labels={"replica": str(i)})
+                sm.attach(rt)
+                replica_metrics.append(sm)
+            eng = ClusterEngine(model, params, replicas=n,
+                                slots=g["slots"], max_len=g["max_len"],
+                                block_size=g["block_size"], chunk=g["chunk"],
+                                routing="affinity", tracer=audit.tracer,
+                                replica_tracers=replica_tracers)
+            t0 = time.perf_counter()
+            eng.run(trace.requests(), arrivals=trace.arrivals)
+            wall = time.perf_counter() - t0
+            rep = eng.report()
+
+            fam_findings = audit.evaluate(engine_report=rep)
+            findings.extend(fam_findings)
+
+            # deterministic throughput: tokens per cluster tick (the
+            # synthetic clock advances 1.0/step, so eng.now is the tick
+            # count and the rate is a pure function of the trace)
+            tpt = rep["tokens_out"] / max(eng.now, 1.0)
+            fam_rmax = max(fam_rmax, tpt)
+            if n == max(REPLICA_SWEEP):
+                fam_affinity = rep["routed_affinity"]
+                fam_shared = rep["shared_hit_rate"]
+
+            # the exposition layer is part of the measured pathway:
+            # replica-labelled series render through one endpoint
+            server = MetricsServer(registry, log)
+            _, _, prom = server.handle("/metrics")
+            text = prom.decode()
+            labelled_ok = (n == 1 or
+                           all(f'replica="{i}"' in text for i in range(n)))
+            if not labelled_ok:
+                findings.append({
+                    "severity": "error", "kind": "cluster-metrics-labels",
+                    "detail": f"{spec.name} n={n}: replica-labelled series "
+                              f"missing from the shared exposition"})
+            sweep.append({
+                "replicas": n,
+                "tokens_per_tick": round(tpt, 3),
+                "tokens_per_s": round(rep["tokens_out"] / max(wall, 1e-9), 1),
+                "ticks": eng.now,
+                "routed_affinity": rep["routed_affinity"],
+                "shared_hit_rate": rep["shared_hit_rate"],
+                "routed": rep["routed"],
+                "spills": rep["routed_spills"],
+                "preemptions": rep["preemptions"],
+                "summary_rebuilds": rep["summary_rebuilds"],
+                "prometheus_sha256": hashlib.sha256(prom).hexdigest(),
+                "events_logged": len(log),
+                "route_events": audit.tracer.count("route"),
+            })
+
+        rmaxes.append(fam_rmax)
+        affinities.append(fam_affinity)
+        shared_hits.append(fam_shared)
+        key = spec.name.replace("-", "_")
+        ledger_metrics[f"{key}_scaling_rmax"] = round(fam_rmax, 3)
+        ledger_metrics[f"{key}_routed_affinity"] = float(fam_affinity)
+        ledger_metrics[f"{key}_shared_hit_rate"] = float(fam_shared)
+        families.append({
+            "workload": trace.describe(),
+            "oracle_ok": oracle_ok,
+            "scaling_rmax": round(fam_rmax, 3),
+            "sweep": sweep,
+        })
+
+    # aggregate headline metrics (mean across families; rmax already a
+    # max across the sweep within each family)
+    agg = {
+        "scaling_rmax": round(sum(rmaxes) / len(rmaxes), 3),
+        "routed_affinity": round(sum(affinities) / len(affinities), 3),
+        "shared_hit_rate": round(sum(shared_hits) / len(shared_hits), 3),
+    }
+    ledger_metrics.update(agg)
+
+    # ---- ledger: deterministic tick-clock metrics gated tight; the
+    # routing ratios are exact functions of the traces (rel_tol 0.05
+    # absorbs only rounding), rmax gets 0.1 headroom for scheduler
+    # changes that legitimately shift tick counts
+    ledger_out = None
+    if ledger_dir is not None:
+        ledger = Ledger(ledger_dir)
+        specs_l = []
+        for name in ledger_metrics:
+            if name.endswith("_scaling_rmax") or name == "scaling_rmax":
+                specs_l.append(MetricSpec(name, higher_is_better=True,
+                                          rel_tol=0.1))
+            else:
+                specs_l.append(MetricSpec(name, higher_is_better=True,
+                                          rel_tol=0.05))
+        bench_key = f"serve_cluster_{mode}"
+        res = ledger.compare(bench_key, ledger_metrics, specs_l,
+                             update_baseline=update_baseline)
+        findings.extend(res.findings)
+        ledger_out = {"baseline_written": res.baseline_written,
+                      "deltas": res.deltas,
+                      "path": str(ledger.path(bench_key))}
+
+    return {
+        "bench": "serve_cluster",
+        "arch": cfg.name,
+        "mode": mode,
+        "replica_sweep": list(REPLICA_SWEEP),
+        "oracle_ok": all(f["oracle_ok"] for f in families),
+        **agg,
+        "families": families,
+        "ledger": ledger_out,
+        "findings": findings,
+    }
+
+
+def run():
+    """benchmarks.run CSV protocol."""
+    res = bench(smoke=True)
+    n_err = sum(1 for f in res["findings"] if f["severity"] == "error")
+    if n_err:
+        raise RuntimeError(f"serve_cluster: {n_err} error finding(s): "
+                           + "; ".join(f["detail"] for f in res["findings"]
+                                       if f["severity"] == "error"))
+    for fam in res["families"]:
+        peak = max(fam["sweep"], key=lambda s: s["tokens_per_tick"])
+        yield {"name": f"serve_cluster.{fam['workload']['workload']}",
+               "us_per_call": 1e6 / max(peak["tokens_per_s"], 1e-9),
+               "derived": (f"rmax={fam['scaling_rmax']} "
+                           f"affinity={peak['routed_affinity']} "
+                           f"shared_hit={peak['shared_hit_rate']} "
+                           f"oracle_ok={fam['oracle_ok']}")}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger-dir", default=None,
+                    help="BENCH_*.json directory; omit to skip the ledger")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(bench(args.arch, smoke=args.smoke, seed=args.seed,
+                           ledger_dir=args.ledger_dir,
+                           update_baseline=args.update_baseline)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# The one CI gate: emit-kind lint, tier-1 tests, full smoke harness.
+#
+#   scripts/ci.sh [--artifacts-dir DIR]
+#
+# Three stages, fail-fast, cheapest first:
+#   1. emit-kind lint — every tracer.emit(kind) in src/, benchmarks/,
+#      and scripts/ must be declared in audit.trace.KNOWN_KINDS
+#   2. tier-1 pytest  — the full unit/integration suite (-x -q)
+#   3. smoke_all      — every family forward/train/prefill/decode plus
+#      the serving, audit-pathway, workload-SLO, and cluster benchmarks,
+#      gated on Diagnostics findings (ledger orphans + perf trend
+#      included); --json keeps the machine-readable report on stdout
+# Any extra arguments (e.g. --artifacts-dir DIR) pass through to
+# scripts/smoke_all.py.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== ci 1/3: emit-kind lint =="
+python -m pytest -q \
+    "tests/test_audit.py::test_emitted_kinds_are_declared_in_known_kinds"
+
+echo "== ci 2/3: tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== ci 3/3: smoke_all =="
+python scripts/smoke_all.py --json "$@"
+
+echo "== ci: all gates green =="

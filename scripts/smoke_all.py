@@ -1,8 +1,9 @@
 """Dev harness: tiny forward/train/prefill/decode for every family on CPU,
-plus the serving-throughput, audit-pathway, and workload-SLO smokes
-gated on their diagnostics findings, a ledger integrity audit (orphan
-``BENCH_*.json`` files are errors), and the rolling-median throughput
-trend over ledger history.
+plus the serving-throughput, audit-pathway, workload-SLO, and
+cluster-scaling smokes gated on their diagnostics findings, a ledger
+integrity audit (orphan ``BENCH_*.json`` files are errors), and the
+rolling-median throughput trend over ledger history (a collapse beyond
+``TREND_FACTOR`` is a warn-level finding).
 
     PYTHONPATH=src python scripts/smoke_all.py [archs...] [--json]
         [--ledger-dir DIR] [--update-baseline] [--artifacts-dir DIR]
@@ -40,7 +41,15 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: keys are the only ledger files allowed to exist in the ledger dir —
 #: ``Ledger.audit_owned`` flags anything else as an orphan (a baseline
 #: nobody maintains silently attests metrics nothing measures).
-BENCHES = ["serve_throughput", "audit_pathways", "serve_workloads"]
+BENCHES = ["serve_throughput", "audit_pathways", "serve_workloads",
+           "serve_cluster"]
+
+#: Throughput-trend regression factor: the latest ungated wall-clock
+#: throughput sample dropping below median/TREND_FACTOR over the ledger
+#: history window is a warn-level ``perf-trend`` finding — wall time on
+#: shared CI is too noisy to gate run-to-run, but a sustained halving
+#: against the rolling median is a real trajectory signal, not noise.
+TREND_FACTOR = 1.5
 
 
 def owned_ledger_keys(benches=None) -> list[str]:
@@ -131,15 +140,21 @@ def main() -> int:
     workloads_rec = run_bench("serve_workloads.py", ledger_flags)
     diag.extend(workloads_rec["findings"], source="serve_workloads")
 
+    cluster_rec = run_bench("serve_cluster.py", ledger_flags)
+    diag.extend(cluster_rec["findings"], source="serve_cluster")
+
     ledger_deltas = {
         "serve_throughput": serve_rec.get("ledger"),
         "audit_pathways": audit_rec.get("ledger"),
         "serve_workloads": workloads_rec.get("ledger"),
+        "serve_cluster": cluster_rec.get("ledger"),
     }
 
     # ledger integrity + trend: orphan BENCH files are errors; the
     # rolling median of the ungated wall-clock throughput is the
-    # trajectory signal the per-run numbers are too noisy to carry
+    # trajectory signal the per-run numbers are too noisy to carry —
+    # and a latest sample collapsing below median/TREND_FACTOR is a
+    # warn-level finding, not just a printout
     from repro.audit import Ledger
 
     ledger = Ledger(args.ledger_dir)
@@ -147,6 +162,16 @@ def main() -> int:
                 source="ledger-integrity")
     throughput_trend = ledger.rolling_median(
         "serve_throughput_smoke", "paged_tokens_per_s")
+    if throughput_trend and throughput_trend["n"] >= 3:
+        median, latest = throughput_trend["median"], throughput_trend["latest"]
+        if median > 0 and latest < median / TREND_FACTOR:
+            diag.extend([{
+                "severity": "warn", "kind": "perf-trend",
+                "detail": f"paged_tokens_per_s latest {latest} fell below "
+                          f"median {median} / {TREND_FACTOR} over the last "
+                          f"{throughput_trend['n']} ledger entries: "
+                          f"sustained throughput regression"}],
+                source="ledger-trend")
     ok = diag.gate()
 
     report = {
@@ -172,6 +197,12 @@ def main() -> int:
                 "p99_decode_gap_ticks": f["p99_decode_gap_ticks"],
                 "prefix_hit_rate": f["report"]["prefix_hit_rate"],
             } for f in workloads_rec["families"]]},
+        "serve_cluster": {
+            "oracle_ok": cluster_rec["oracle_ok"],
+            "scaling_rmax": cluster_rec["scaling_rmax"],
+            "routed_affinity": cluster_rec["routed_affinity"],
+            "shared_hit_rate": cluster_rec["shared_hit_rate"],
+            "replica_sweep": cluster_rec["replica_sweep"]},
         "paged_tokens_per_s_trend": throughput_trend,
         "findings": diag.findings,
         "ledger": ledger_deltas,
@@ -206,6 +237,11 @@ def main() -> int:
         print(f"OK serve_workloads         "
               f"slo_ok={workloads_rec['slo_ok']} "
               f"oracle_ok={workloads_rec['oracle_ok']}")
+        print(f"OK serve_cluster           "
+              f"rmax={cluster_rec['scaling_rmax']} "
+              f"affinity={cluster_rec['routed_affinity']} "
+              f"shared_hit={cluster_rec['shared_hit_rate']} "
+              f"oracle_ok={cluster_rec['oracle_ok']}")
         if throughput_trend:
             print(f"   paged_tokens_per_s     "
                   f"median={throughput_trend['median']} "

@@ -134,7 +134,10 @@ class Evidence:
                 counts[fn] = counts.get(fn, 0) + 1
         rep = self.engine_report or {}
         if isinstance(rep.get("compiles"), int):
-            if rep.get("engine") == "paged":
+            if rep.get("engine") in ("paged", "cluster"):
+                # a cluster's replicas are paged engines sharing one jit
+                # cache; its ``compiles`` is the per-replica max, judged
+                # against the same chunk-fn budget
                 fn = ("decode_paged_chunk" if rep.get("kernel") == "paged"
                       else "decode_chunk")
             else:
@@ -170,6 +173,16 @@ class ExpectedSignature:
     # rank quantiles over deterministic tick latencies: bit-reproducible.
     p99_ttft_ticks: float | None = None
     p99_decode_gap_ticks: float | None = None
+    # cluster routing quality (serve.cluster reports): floors on the
+    # fraction of affinity opportunities the router converted and on the
+    # cluster-wide prefix hit rate.  Misrouting is the canonical
+    # token-invisible degradation — every stream stays bit-identical
+    # while prefixes a sibling replica already holds are recomputed.
+    # Violations are ``pathway-routing`` findings.  Like the latency
+    # bounds, the floors are workload properties: benchmarks register
+    # rules calibrated from a healthy affinity run.
+    min_routed_affinity: float | None = None
+    min_shared_hit_rate: float | None = None
     allowed_collectives: frozenset[str] | None = None
     max_collective_group: int | None = None  # default: ctx.n_devices
     forbid_host_transfer: bool = False
@@ -246,6 +259,12 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
 
     if sig.engine is not None:
         got = ev.engine_kind()
+        if got == "cluster" and sig.engine != "cluster":
+            # a cluster is a router over per-replica engines: rules about
+            # the serving pathway judge what each replica runs, read from
+            # the cluster's declared replica engine
+            init_ = ev.engine_init() or {}
+            got = init_.get("replica_engine", got)
         if got is not None and got != sig.engine:
             out.append(_find(
                 rule, "pathway-engine-selection",
@@ -340,6 +359,30 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                             f"p99 inter-token gap {p99:.2f} ticks breaches "
                             f"the {sig.p99_decode_gap_ticks:.2f}-tick SLO "
                             f"({len(gaps)} finished request(s))"))
+
+    rep = ev.engine_report or {}
+    if sig.min_routed_affinity is not None:
+        ra = rep.get("routed_affinity")
+        # vacuously healthy when the workload offered no affinity
+        # opportunity — nothing to convert, nothing to misroute
+        if (ra is not None and rep.get("affine_opportunities", 0) > 0
+                and ra < sig.min_routed_affinity):
+            out.append(_find(
+                rule, "pathway-routing",
+                f"router converted {ra:.3f} of "
+                f"{rep['affine_opportunities']} affinity opportunities "
+                f"(< {sig.min_routed_affinity:.3f}): requests land off "
+                f"their prefix-affine replica (token streams stay "
+                f"identical; resident prefixes are recomputed)"))
+    if sig.min_shared_hit_rate is not None and ctx.shared_prefix:
+        shr = rep.get("shared_hit_rate")
+        if shr is not None and shr < sig.min_shared_hit_rate:
+            out.append(_find(
+                rule, "pathway-routing",
+                f"cluster-wide prefix hit rate {shr:.3f} below "
+                f"{sig.min_shared_hit_rate:.3f} on a shared-prefix "
+                f"workload: misrouting scatters prefix-sharing requests "
+                f"across replicas, recomputing pages a sibling holds"))
 
     if sig.max_compiles_per_fn is not None:
         for fn, n in ev.compile_counts().items():

@@ -54,11 +54,28 @@ def _fmt(v: float) -> str:
     return repr(f)
 
 
+def _label_suffix(labels: dict[str, str] | None,
+                  extra: dict[str, str] | None = None) -> str:
+    """Deterministic ``{k="v",...}`` rendering: label keys sorted, values
+    escaped per the Prometheus text format; ``extra`` (the histogram
+    ``le`` bound) renders last.  Empty labels render as the empty string,
+    so unlabelled series keep their exact pre-label byte format."""
+    items = sorted((labels or {}).items()) + list((extra or {}).items())
+    if not items:
+        return ""
+    def esc(v):
+        return str(v).replace("\\", r"\\").replace('"', r'\"').replace(
+            "\n", r"\n")
+    return "{" + ",".join(f'{k}="{esc(v)}"' for k, v in items) + "}"
+
+
 class Counter:
     """Monotonic counter."""
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "",
+                 labels: dict[str, str] | None = None):
         self.name, self.help = name, help
+        self.labels = dict(labels or {})
         self.value = 0.0
 
     def inc(self, v: float = 1.0) -> None:
@@ -70,8 +87,10 @@ class Counter:
 class Gauge:
     """Point-in-time value (set to the latest observation)."""
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "",
+                 labels: dict[str, str] | None = None):
         self.name, self.help = name, help
+        self.labels = dict(labels or {})
         self.value = 0.0
 
     def set(self, v: float) -> None:
@@ -90,11 +109,13 @@ class Histogram:
     """
 
     def __init__(self, name: str, help: str = "",
-                 buckets: tuple[float, ...] = TTFT_BUCKETS):
+                 buckets: tuple[float, ...] = TTFT_BUCKETS,
+                 labels: dict[str, str] | None = None):
         if list(buckets) != sorted(buckets) or len(set(buckets)) != len(buckets):
             raise ValueError(f"histogram {name}: buckets must be strictly "
                              f"increasing, got {buckets}")
         self.name, self.help = name, help
+        self.labels = dict(labels or {})
         self.buckets = tuple(float(b) for b in buckets)
         self.counts = [0] * (len(self.buckets) + 1)   # +Inf last
         self.sum = 0.0
@@ -138,77 +159,99 @@ class Histogram:
 class MetricsRegistry:
     """Named metrics with Prometheus text + JSON snapshot rendering.
 
-    Registration is idempotent by name (asking again returns the same
-    instance); a name registered as one type cannot be re-registered as
-    another.  Rendering iterates in sorted-name order so output bytes
-    are a pure function of the metric values.
+    A metric is a *series*: a name plus an optional label set (e.g. one
+    ``serve_tokens_out_total`` series per cluster replica, labelled
+    ``{replica="0"}``).  Registration is idempotent by (name, labels) —
+    asking again returns the same instance; a name registered as one
+    type cannot be re-registered as another, with or without labels.
+    Rendering groups series of a name under one HELP/TYPE header and
+    iterates in sorted (name, labels) order so output bytes are a pure
+    function of the metric values.
     """
 
     def __init__(self):
-        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+        self._metrics: dict[tuple[str, str], Counter | Gauge | Histogram] = {}
 
-    def _add(self, kind, name: str, help: str, **kw):
-        cur = self._metrics.get(name)
-        if cur is not None:
-            if not isinstance(cur, kind):
+    def _add(self, kind, name: str, help: str,
+             labels: dict[str, str] | None = None, **kw):
+        key = (name, _label_suffix(labels))
+        for (n, _), existing in self._metrics.items():
+            if n == name and not isinstance(existing, kind):
                 raise ValueError(f"metric {name!r} already registered as "
-                                 f"{type(cur).__name__}")
+                                 f"{type(existing).__name__}")
+        cur = self._metrics.get(key)
+        if cur is not None:
             return cur
-        m = kind(name, help, **kw)
-        self._metrics[name] = m
+        m = kind(name, help, labels=labels, **kw)
+        self._metrics[key] = m
         return m
 
-    def counter(self, name: str, help: str = "") -> Counter:
-        return self._add(Counter, name, help)
+    def counter(self, name: str, help: str = "",
+                labels: dict[str, str] | None = None) -> Counter:
+        return self._add(Counter, name, help, labels)
 
-    def gauge(self, name: str, help: str = "") -> Gauge:
-        return self._add(Gauge, name, help)
+    def gauge(self, name: str, help: str = "",
+              labels: dict[str, str] | None = None) -> Gauge:
+        return self._add(Gauge, name, help, labels)
 
     def histogram(self, name: str, help: str = "",
-                  buckets: tuple[float, ...] = TTFT_BUCKETS) -> Histogram:
-        return self._add(Histogram, name, help, buckets=buckets)
+                  buckets: tuple[float, ...] = TTFT_BUCKETS,
+                  labels: dict[str, str] | None = None) -> Histogram:
+        return self._add(Histogram, name, help, labels, buckets=buckets)
 
-    def get(self, name: str):
-        return self._metrics[name]
+    def get(self, name: str, labels: dict[str, str] | None = None):
+        return self._metrics[(name, _label_suffix(labels))]
+
+    def series(self, name: str) -> list:
+        """All series registered under ``name``, label-sorted."""
+        return [m for (n, _), m in sorted(self._metrics.items())
+                if n == name]
 
     # ---------------------------------------------------------- renderers
     def render_prometheus(self) -> str:
         """Prometheus text exposition format, deterministically ordered."""
         lines: list[str] = []
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
-            if m.help:
-                lines.append(f"# HELP {name} {m.help}")
-            if isinstance(m, Counter):
-                lines.append(f"# TYPE {name} counter")
-                lines.append(f"{name} {_fmt(m.value)}")
-            elif isinstance(m, Gauge):
-                lines.append(f"# TYPE {name} gauge")
-                lines.append(f"{name} {_fmt(m.value)}")
+        prev_name = None
+        for (name, suffix) in sorted(self._metrics):
+            m = self._metrics[(name, suffix)]
+            if name != prev_name:
+                prev_name = name
+                if m.help:
+                    lines.append(f"# HELP {name} {m.help}")
+                kind = ("counter" if isinstance(m, Counter)
+                        else "gauge" if isinstance(m, Gauge)
+                        else "histogram")
+                lines.append(f"# TYPE {name} {kind}")
+            if isinstance(m, (Counter, Gauge)):
+                lines.append(f"{name}{suffix} {_fmt(m.value)}")
             else:
-                lines.append(f"# TYPE {name} histogram")
                 cum = 0
                 for i, b in enumerate(m.buckets):
                     cum += m.counts[i]
-                    lines.append(f'{name}_bucket{{le="{_fmt(b)}"}} {cum}')
-                lines.append(f'{name}_bucket{{le="+Inf"}} {m.count}')
-                lines.append(f"{name}_sum {_fmt(round(m.sum, 6))}")
-                lines.append(f"{name}_count {m.count}")
+                    lines.append(f"{name}_bucket"
+                                 f"{_label_suffix(m.labels, {'le': _fmt(b)})}"
+                                 f" {cum}")
+                lines.append(f"{name}_bucket"
+                             f"{_label_suffix(m.labels, {'le': '+Inf'})}"
+                             f" {m.count}")
+                lines.append(f"{name}_sum{suffix} {_fmt(round(m.sum, 6))}")
+                lines.append(f"{name}_count{suffix} {m.count}")
         return "\n".join(lines) + "\n"
 
     def snapshot(self) -> dict:
         """JSON-able snapshot: same information as the text exposition
-        plus the deterministic quantile estimates."""
+        plus the deterministic quantile estimates.  Labelled series key
+        as ``name{k="v"}``; unlabelled series keep the bare name."""
         out: dict[str, dict] = {"counters": {}, "gauges": {},
                                 "histograms": {}}
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
+        for (name, suffix) in sorted(self._metrics):
+            m = self._metrics[(name, suffix)]
             if isinstance(m, Counter):
-                out["counters"][name] = m.value
+                out["counters"][name + suffix] = m.value
             elif isinstance(m, Gauge):
-                out["gauges"][name] = m.value
+                out["gauges"][name + suffix] = m.value
             else:
-                out["histograms"][name] = m.snapshot()
+                out["histograms"][name + suffix] = m.snapshot()
         return out
 
 
@@ -286,45 +329,69 @@ class ServeMetrics:
     observed are tick-clock payloads (``ttft_ticks``, ``tick``,
     ``pages_in_use``), so the whole registry — quantiles included — is a
     deterministic function of the trace.
+
+    ``labels`` scopes every series this binding creates (e.g.
+    ``{"replica": "0"}``): a cluster attaches one ``ServeMetrics`` per
+    replica tracer to a *shared* registry, and the single ``/metrics``
+    endpoint exposes replica-labelled series side by side.
     """
 
-    def __init__(self, registry: MetricsRegistry | None = None):
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 labels: dict[str, str] | None = None):
         self.registry = registry or MetricsRegistry()
-        r = self.registry
+        self.labels = dict(labels or {})
+        r, lb = self.registry, self.labels
         self.submitted = r.counter(
-            "serve_requests_submitted_total", "requests entering submit()")
+            "serve_requests_submitted_total", "requests entering submit()",
+            labels=lb)
         self.finished = r.counter(
-            "serve_requests_finished_total", "requests run to completion")
+            "serve_requests_finished_total", "requests run to completion",
+            labels=lb)
         self.cancelled = r.counter(
-            "serve_requests_cancelled_total", "requests cancelled mid-flight")
+            "serve_requests_cancelled_total", "requests cancelled mid-flight",
+            labels=lb)
         self.preemptions = r.counter(
-            "serve_preemptions_total", "slots preempted on OOM")
+            "serve_preemptions_total", "slots preempted on OOM", labels=lb)
         self.recompiles = r.counter(
-            "serve_recompiles_total", "jitted-step compile cache misses")
+            "serve_recompiles_total", "jitted-step compile cache misses",
+            labels=lb)
         self.tokens_out = r.counter(
-            "serve_tokens_out_total", "output tokens produced")
+            "serve_tokens_out_total", "output tokens produced", labels=lb)
         self.prefill_tokens = r.counter(
-            "serve_prefill_tokens_total", "prompt tokens computed")
+            "serve_prefill_tokens_total", "prompt tokens computed", labels=lb)
         self.cached_tokens = r.counter(
-            "serve_cached_tokens_total", "prompt tokens served by prefix cache")
+            "serve_cached_tokens_total", "prompt tokens served by prefix cache",
+            labels=lb)
         self.steps = r.counter(
-            "serve_steps_total", "engine ticks with at least one active lane")
+            "serve_steps_total", "engine ticks with at least one active lane",
+            labels=lb)
+        self.routed = r.counter(
+            "serve_routed_total", "requests placed by the cluster router",
+            labels=lb)
+        self.routed_affine = r.counter(
+            "serve_routed_affine_total",
+            "router placements on a deepest-prefix-match replica", labels=lb)
+        self.routed_spill = r.counter(
+            "serve_routed_spill_total",
+            "router placements spilled off a saturated affine replica",
+            labels=lb)
         self.active_lanes = r.gauge(
-            "serve_active_lanes", "lanes active in the latest step")
+            "serve_active_lanes", "lanes active in the latest step", labels=lb)
         self.pages_total = r.gauge(
-            "serve_pages_total", "page-pool capacity (engine-init)")
+            "serve_pages_total", "page-pool capacity (engine-init)", labels=lb)
         self.prefix_hit_rate = r.gauge(
-            "serve_prefix_hit_rate", "cached / (cached + prefill) tokens")
+            "serve_prefix_hit_rate", "cached / (cached + prefill) tokens",
+            labels=lb)
         self.ttft = r.histogram(
             "serve_ttft_ticks", "submit-to-first-token latency (tick clock)",
-            buckets=TTFT_BUCKETS)
+            buckets=TTFT_BUCKETS, labels=lb)
         self.gap = r.histogram(
             "serve_decode_gap_ticks",
             "mean inter-token gap per finished request (tick clock)",
-            buckets=GAP_BUCKETS)
+            buckets=GAP_BUCKETS, labels=lb)
         self.occupancy = r.histogram(
             "serve_page_occupancy", "pages in use / pool capacity, sampled "
-            "at admission and release", buckets=OCCUPANCY_BUCKETS)
+            "at admission and release", buckets=OCCUPANCY_BUCKETS, labels=lb)
         self._first_tick: dict[int, float] = {}   # rid -> first-token tick
         self._pages = 0
 
@@ -377,6 +444,13 @@ class ServeMetrics:
             self._observe_pages(d)
         elif ev.kind == "compile":
             self.recompiles.inc()
+        elif ev.kind == "route":
+            self.routed.inc()
+            if d.get("decision") in ("affine", "spill"):
+                # spill is still a router *decision* series; affinity
+                # conversion is the affine counter alone
+                (self.routed_affine if d["decision"] == "affine"
+                 else self.routed_spill).inc()
 
     def _update_hit_rate(self) -> None:
         total = self.cached_tokens.value + self.prefill_tokens.value

@@ -25,9 +25,10 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
 
-#: Every event kind the instrumented layers in ``src/`` may emit.  The
-#: emit-kind lint (tests/test_audit.py) greps ``tracer.emit("...")`` /
-#: ``tracer.span("...")`` literals out of the source tree and asserts
+#: Every event kind the instrumented layers may emit.  The emit-kind
+#: lint (tests/test_audit.py) greps ``tracer.emit("...")`` /
+#: ``tracer.span("...")`` literals out of ``src/``, ``benchmarks/``,
+#: and ``scripts/`` and asserts
 #: they all appear here, so the metrics layer and the expectation
 #: registry can never silently miss a pathway because someone added an
 #: emitter without declaring its kind.
@@ -38,6 +39,8 @@ KNOWN_KINDS = frozenset({
     # serve.scheduler — planning decisions
     "sched-admit", "sched-readmit", "sched-preempt", "sched-done",
     "sched-cancel",
+    # serve.cluster — multi-replica routing decisions
+    "route",
     # launch.train — training loop + checkpointing
     "train-step", "ckpt-save", "ckpt-restore",
     # launch.dryrun — lowering/compile attestation cells

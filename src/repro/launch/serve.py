@@ -15,6 +15,11 @@ Both engines are driven through the unified request-lifecycle API
 sampled streams deterministic and engine-independent) and drained, and
 per-request TTFT comes from the audit tracer's lifecycle events.
 
+``--replicas N`` (N > 1) serves through ``repro.serve.cluster``: N paged
+replicas behind prefix-affinity routing (``--routing`` selects the
+policy; ``random`` deliberately misroutes so operators can watch the
+``pathway-routing`` detector fire without changing a single token).
+
 ``--metrics-port`` starts the live observability endpoint
 (``audit.metrics.MetricsServer``): a ``ServeMetrics`` registry and an
 ``EventLog`` subscribe to the audit tracer, so ``/metrics`` (Prometheus
@@ -34,12 +39,12 @@ import jax
 import numpy as np
 
 from repro.audit import (AuditContext, Evidence, EventLog, MetricsServer,
-                         RunAudit, ServeMetrics)
+                         RunAudit, ServeMetrics, Tracer)
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
-from repro.serve import (PagedServeEngine, Request, SamplingParams,
-                         ServeEngine)
+from repro.serve import (ClusterEngine, PagedServeEngine, Request,
+                         SamplingParams, ServeEngine)
 
 
 def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
@@ -47,6 +52,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           engine: str = "paged", block_size: int = 8,
           chunk: int = 4, shared_prefix: int = 0,
           use_prefix_cache: bool = True, kernel: str = "paged",
+          replicas: int = 1, routing: str = "affinity",
           audit: bool = True, metrics_port: int | None = None,
           metrics_linger: float = 0.0,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
@@ -59,6 +65,11 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
 
     if engine == "paged" and cfg.family not in ("dense", "moe"):
         engine = "contiguous"   # no chunked path for stateful caches yet
+    # cluster replicas are paged engines; anything that forces the
+    # contiguous path also collapses the cluster to a single engine
+    if engine != "paged":
+        replicas = 1
+    is_cluster = replicas > 1
     # a shared prefix shorter than one page cannot produce cache hits
     # (only full blocks register), so only declare the workload
     # shared-prefix when a hit is actually possible
@@ -66,9 +77,13 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         workload="serve", family=cfg.family, arch=cfg.name,
         shared_prefix=shared_prefix >= block_size)) if audit else None
     tracer = run_audit.tracer if run_audit else None
+    replica_tracers = [Tracer() for _ in range(replicas)] if is_cluster else []
 
     # live observability: metrics + event log fed from the tracer's
-    # subscription hook, exposed over HTTP while the engine runs
+    # subscription hook, exposed over HTTP while the engine runs.  A
+    # cluster attaches one replica-labelled ServeMetrics per replica
+    # tracer to the SAME registry, so the single endpoint serves every
+    # replica's series side by side.
     metrics = server = None
     if metrics_port is not None:
         if tracer is None:
@@ -76,11 +91,21 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
                              "drop --no-audit")
         metrics = ServeMetrics()
         metrics.attach(tracer)
+        for i, rt in enumerate(replica_tracers):
+            ServeMetrics(metrics.registry,
+                         labels={"replica": str(i)}).attach(rt)
         log = EventLog()
         tracer.subscribe(log.append)
         server = MetricsServer(metrics.registry, log)
         bound_port = server.serve(port=metrics_port)
-    if engine == "paged":
+    if is_cluster:
+        eng = ClusterEngine(model, params, replicas=replicas, slots=slots,
+                            max_len=max_len, block_size=block_size,
+                            chunk=chunk, routing=routing,
+                            use_prefix_cache=use_prefix_cache,
+                            kernel=kernel, tracer=tracer,
+                            replica_tracers=replica_tracers)
+    elif engine == "paged":
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                block_size=block_size, chunk=chunk,
                                use_prefix_cache=use_prefix_cache,
@@ -105,20 +130,25 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
     wall = time.time() - t0
 
     ttfts = [r.t_first - r.t_submit for r in done if r.t_first]
+    rep = eng.report()
     out = {
         "arch": cfg.name,
-        "engine": engine,
+        "engine": rep["engine"],
         "sampling": sampling.describe(),
-        "served": eng.stats.served,
-        "decode_steps": eng.stats.decode_steps,
-        "tokens_out": eng.stats.tokens_out,
-        "mean_batch_occupancy": round(eng.stats.mean_occupancy, 2),
+        "served": rep["served"],
+        "decode_steps": rep["decode_steps"],
+        "tokens_out": rep["tokens_out"],
+        "mean_batch_occupancy": rep["mean_batch_occupancy"],
         "mean_ttft_s": round(float(np.mean(ttfts)), 4) if ttfts else None,
-        "tokens_per_s": round(eng.stats.tokens_out / max(wall, 1e-9), 1),
+        "tokens_per_s": round(rep["tokens_out"] / max(wall, 1e-9), 1),
         "wall_s": round(wall, 2),
     }
-    if engine == "paged":
-        rep = eng.report()
+    if is_cluster:
+        out.update({k: rep[k] for k in
+                    ("replicas", "routing", "routed", "routed_affinity",
+                     "routed_spills", "shared_hit_rate", "prefix_hit_rate",
+                     "preemptions", "kernel", "summary_rebuilds")})
+    elif engine == "paged":
         out.update({k: rep[k] for k in
                     ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
                      "page_peak_utilization", "preemptions", "kernel")})
@@ -177,6 +207,16 @@ def main() -> None:
                          "dense working-cache gather — the latter exists "
                          "so operators can watch the pathway-kernel "
                          "detector fire")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 serves through a ClusterEngine: N paged "
+                         "replicas behind prefix-affinity routing, one "
+                         "metrics endpoint with replica-labelled series")
+    ap.add_argument("--routing",
+                    choices=["affinity", "round_robin", "random"],
+                    default="affinity",
+                    help="cluster routing policy (random exists so "
+                         "operators can watch the pathway-routing "
+                         "detector fire; token streams do not change)")
     ap.add_argument("--no-prefix-cache", dest="use_prefix_cache",
                     action="store_false",
                     help="disable prefix-KV reuse (the audit flags this "
@@ -197,6 +237,7 @@ def main() -> None:
                 block_size=args.block_size, chunk=args.chunk,
                 shared_prefix=args.shared_prefix,
                 use_prefix_cache=args.use_prefix_cache, kernel=args.kernel,
+                replicas=args.replicas, routing=args.routing,
                 audit=args.audit, metrics_port=args.metrics_port,
                 metrics_linger=args.metrics_linger,
                 temperature=args.temperature, top_k=args.top_k,

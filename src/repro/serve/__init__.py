@@ -18,9 +18,15 @@ request-lifecycle API.
   shared-prefix families (multi-tenant chat, RAG, agent loops) crossed
   with arrival processes (uniform, bursty, diurnal, heavy-tail),
   emitting the ``Request`` shapes ``Engine.submit`` accepts.
+- ``cluster``: ClusterEngine — N PagedServeEngine replicas behind the
+  same ``Engine`` contract, routed by prefix affinity with load-aware
+  spill (policies: ``affinity`` / ``round_robin`` / ``random``).
 """
 from repro.serve.api import (GREEDY, Engine, LaneState, RequestHandle,
                              SamplingParams, run_requests)
+from repro.serve.cluster import (AffinityPolicy, BloomSummary, ClusterEngine,
+                                 ExactSummary, RandomPolicy, RoundRobinPolicy,
+                                 make_policy, match_depth)
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
                                 compare_engines, token_matrix)
 from repro.serve.paging import (BlockAllocator, BlockAllocatorError,
@@ -31,10 +37,12 @@ from repro.serve.workloads import (WorkloadSpec, WorkloadTrace, generate,
                                    smoke_specs)
 
 __all__ = [
-    "BlockAllocator", "BlockAllocatorError", "DevicePageView", "Engine",
-    "GREEDY", "KVPool", "LaneState", "PrefixCache", "PagedServeEngine",
-    "Plan", "Request", "RequestHandle", "SamplingParams", "SchedEntry",
-    "Scheduler", "ServeEngine", "WorkloadSpec", "WorkloadTrace",
-    "chain_hashes", "compare_engines", "generate", "pages_for",
-    "run_requests", "smoke_specs", "token_matrix",
+    "AffinityPolicy", "BlockAllocator", "BlockAllocatorError",
+    "BloomSummary", "ClusterEngine", "DevicePageView", "Engine",
+    "ExactSummary", "GREEDY", "KVPool", "LaneState", "PrefixCache",
+    "PagedServeEngine", "Plan", "RandomPolicy", "Request", "RequestHandle",
+    "RoundRobinPolicy", "SamplingParams", "SchedEntry", "Scheduler",
+    "ServeEngine", "WorkloadSpec", "WorkloadTrace", "chain_hashes",
+    "compare_engines", "generate", "make_policy", "match_depth",
+    "pages_for", "run_requests", "smoke_specs", "token_matrix",
 ]

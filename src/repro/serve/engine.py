@@ -814,6 +814,16 @@ class PagedServeEngine:
             "prefill_tokens": self.pstats.prefill_tokens,
             "cached_tokens": self.pstats.cached_tokens,
             "prefix_hit_rate": round(self.pstats.prefix_hit_rate, 3),
+            # prefix-cache internals: the cluster router's summary feed
+            # (serve.cluster refreshes per-replica summaries when the
+            # resident chain count moves) and the operator's view of
+            # cache health without replaying traces
+            "prefix_lookups": self.prefix.stats.lookups,
+            "prefix_hit_blocks": self.prefix.stats.hit_blocks,
+            "prefix_miss_blocks": self.prefix.stats.miss_blocks,
+            "prefix_insertions": self.prefix.stats.insertions,
+            "prefix_evictions": self.prefix.stats.evictions,
+            "prefix_chains": len(self.prefix),
             "page_peak_utilization": round(
                 self.alloc.stats.peak_in_use / self.alloc.num_blocks, 3),
             "pages": self.alloc.num_blocks,
@@ -849,7 +859,8 @@ def compare_engines(model: Model, params: Any,
                     slots: int = 2, max_len: int = 64, block_size: int = 8,
                     chunk: int = 4, repeats: int = 1,
                     sampling: SamplingParams | None = None,
-                    engine_kwargs: dict[str, dict] | None = None):
+                    engine_kwargs: dict[str, dict] | None = None,
+                    cluster: dict | None = None):
     """The paged engine's correctness proof, in the paper's methodology:
     the same workload under two environments (contiguous oracle vs paged)
     must agree token-for-token.  With ``sampling`` given, both engines
@@ -862,6 +873,15 @@ def compare_engines(model: Model, params: Any,
     — e.g. ``{"paged": {"kernel": "gather"}}`` holds the oracle verdict
     over the dense-fallback pathway while ``{"paged": {"kernel":
     "paged"}}`` pins the Pallas page-table kernel on.
+
+    With ``cluster`` given (a dict of ``ClusterEngine`` kwargs, e.g.
+    ``{"replicas": 3, "routing": "random"}``), the comparison becomes
+    single paged engine vs a ``ClusterEngine`` over the same geometry:
+    routing moves requests between replicas but counter-based sampling
+    keys on ``(seed, rid, step)``, so a cluster of any size — under ANY
+    routing policy — must reproduce the single engine's streams exactly.
+    This is the routing-correctness oracle: a router that corrupted,
+    duplicated, or dropped a request would break bit-identity here.
 
     Returns a core.verify.DualEnvReport whose verdicts CI gates on."""
     from repro.core.verify import DualEnvHarness
@@ -892,5 +912,19 @@ def compare_engines(model: Model, params: Any,
         return token_matrix(eng.run(requests()), n, max_new)
 
     harness = DualEnvHarness(repeats=repeats, warmup=0)
+    if cluster is not None:
+        # routing oracle: single paged engine vs the cluster router
+        from repro.serve.cluster import ClusterEngine  # local: avoid cycle
+
+        cluster_kw = dict(cluster)
+
+        def run_cluster():
+            eng = ClusterEngine(model, params, slots=slots, max_len=max_len,
+                                block_size=block_size, chunk=chunk,
+                                **cluster_kw)
+            return token_matrix(eng.run(requests()), n, max_new)
+
+        return harness.compare("paged", run_paged,
+                               "cluster", run_cluster, rtol=1e-9, atol=0.5)
     return harness.compare("contiguous", run_contiguous,
                            "paged", run_paged, rtol=1e-9, atol=0.5)

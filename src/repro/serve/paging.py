@@ -211,6 +211,13 @@ class PrefixCache:
             n += bs
         return n
 
+    def chains(self) -> tuple[int, ...]:
+        """The resident chain hashes, LRU order (coldest first).  This is
+        the cluster router's per-replica summary feed: a replica whose
+        cache holds a request's leading chain hashes can serve its prefix
+        from pages instead of recomputing it."""
+        return tuple(self._map)
+
     # ----------------------------------------------------------- register
     def contains(self, chain_hash: int) -> bool:
         return chain_hash in self._map

@@ -113,14 +113,16 @@ def test_tracer_spans_nest_across_overflow():
 
 def test_emitted_kinds_are_declared_in_known_kinds():
     """Emit-kind lint: every ``tracer.emit("...")`` / ``tracer.span("...")``
-    string literal in ``src/`` must appear in ``KNOWN_KINDS`` — a typo'd
-    kind cannot silently create an event stream nothing subscribes to."""
+    string literal in ``src/``, ``benchmarks/``, and ``scripts/`` must
+    appear in ``KNOWN_KINDS`` — a typo'd kind cannot silently create an
+    event stream nothing subscribes to, no matter which layer emits it."""
     import ast
     from pathlib import Path
 
     from repro.audit.trace import KNOWN_KINDS
 
-    src = Path(__file__).resolve().parent.parent / "src"
+    repo = Path(__file__).resolve().parent.parent
+    roots = [repo / "src", repo / "benchmarks", repo / "scripts"]
 
     def literal_kinds(node):
         """String constants reachable as the call's kind argument
@@ -132,20 +134,23 @@ def test_emitted_kinds_are_declared_in_known_kinds():
         return []
 
     found = {}
-    for path in sorted(src.rglob("*.py")):
-        tree = ast.parse(path.read_text(), filename=str(path))
-        for node in ast.walk(tree):
-            if (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Attribute)
-                    and node.func.attr in ("emit", "span") and node.args):
-                for kind in literal_kinds(node.args[0]):
-                    found.setdefault(kind, []).append(
-                        f"{path.relative_to(src)}:{node.lineno}")
+    for root in roots:
+        for path in sorted(root.rglob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in ("emit", "span") and node.args):
+                    for kind in literal_kinds(node.args[0]):
+                        found.setdefault(kind, []).append(
+                            f"{path.relative_to(repo)}:{node.lineno}")
     undeclared = {k: v for k, v in found.items() if k not in KNOWN_KINDS}
     assert not undeclared, (
         f"emit/span kinds missing from KNOWN_KINDS: {undeclared}")
-    # the lint must not be vacuous: the instrumented layers are present
+    # the lint must not be vacuous: the instrumented layers are present,
+    # including the cluster router's route events
     assert len(found) >= 15, sorted(found)
+    assert "route" in found
 
 
 # ---------------------------------------------------------- expectations
