@@ -37,7 +37,17 @@ as an error:
      1/replicas and the cluster-wide prefix hit rate drops (each
      replica recomputes prefixes a sibling already holds).  Caught by
      ``pathway-routing`` floors calibrated from the healthy affinity
-     run of the same trace.
+     run of the same trace;
+  8. admission throttle on a staggered-arrival trace with ample slots:
+     the scheduler is consulted every N-th tick, so requests sit queued
+     for whole scheduling epochs while slots idle.  Streams stay
+     identical and even the aggregate SLO can look like "slow machine"
+     — the *attribution* detector (``audit.timeline``) decomposes the
+     p99-TTFT request's latency into exact phase shares and flags that
+     queue_wait, not prefill, dominates (``pathway-attribution``),
+     against share bounds calibrated from the healthy run of the same
+     trace.  This is the layer that turns "an SLO regressed" into
+     "queue wait ate the p99".
 
 A request-lifecycle probe additionally runs sampled + cancelled requests
 through the audited pathway and gates on their events being visible in
@@ -85,6 +95,7 @@ SEEDS = {
     "slow-admission": "pathway-ttft",
     "bursty-overload-no-preemption": "pathway-slo",
     "random-routing": "pathway-routing",
+    "admission-throttle": "pathway-attribution",
 }
 
 #: Routing floors as fractions of the healthy affinity run's values
@@ -102,6 +113,15 @@ ADMIT_EVERY = 8
 #: inflation, not absorb noise).
 TTFT_MARGIN = 1.25
 
+#: Attribution seed: scheduler consulted every N-th tick on a
+#: staggered-arrival trace whose slot count matches the offered load —
+#: healthy queue share is small, throttled requests wait most of an
+#: epoch.  The share bounds use the same calibrated-margin idea as
+#: TTFT_MARGIN (deterministic runs: margins separate, they don't absorb
+#: noise).
+ATTR_ADMIT_EVERY = 10
+ATTR_MARGIN = 1.25
+
 
 def _ctx(cfg, shared_prefix=True):
     from repro.audit import AuditContext
@@ -114,7 +134,7 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
           ledger_dir: str | None = None,
           update_baseline: bool = False) -> dict:
     from repro.audit import (Evidence, ExpectedSignature, Ledger, MetricSpec,
-                             Rule, RunAudit)
+                             Rule, RunAudit, attribution)
     from repro.serve import (PagedServeEngine, SamplingParams, ServeEngine,
                              compare_engines, token_matrix)
     from repro.configs import ALL_ARCHS, reduced
@@ -409,6 +429,95 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
             "detail": "chat trace offered the cluster router no affinity "
                       "opportunity in the healthy run: the seed "
                       "contrasts nothing"})
+
+    # ------------------- seed 8: admission throttle → phase attribution.
+    # A dedicated staggered-arrival trace (one request every 3 ticks)
+    # on an engine with slots ≈ load: healthily each request admits on
+    # the next tick, so its TTFT is almost all prefill.  With the
+    # scheduler consulted only every ATTR_ADMIT_EVERY ticks, requests
+    # queue for most of a scheduling epoch while slots idle — the
+    # schedule shifts, the streams don't (greedy decode is schedule-
+    # invariant).  The timeline detector must both FIRE and LOCALIZE:
+    # the pathway-attribution finding has to name queue_wait as the
+    # dominant phase of the p99-TTFT request.
+    at_geom = dict(slots=3, max_len=48, block_size=8, chunk=4)
+    AT_N, AT_MAX_NEW = 6, 4
+    at_make = _trace_factory(cfg.vocab_size, n_requests=AT_N,
+                             shared_len=16, tail_lo=3, tail_hi=6,
+                             max_new=AT_MAX_NEW, seed=seed + 13)
+    at_arrivals = [float(3 * i) for i in range(AT_N)]
+
+    def at_run(admit_every: int):
+        a = RunAudit(_ctx(cfg))
+        e = PagedServeEngine(model, params, admit_every=admit_every,
+                             tracer=a.tracer, **at_geom)
+        d = e.run(at_make(), arrivals=list(at_arrivals))
+        return a, e, token_matrix(d, AT_N, AT_MAX_NEW)
+
+    at_audit, at_eng, at_tokens = at_run(1)
+    at_att = attribution(
+        Evidence(tracer=at_audit.tracer).request_timelines())
+    attr_rule = Rule(
+        name="bench-attribution", families=("dense", "moe"),
+        workloads=("bench:audit_pathways",),
+        expect=ExpectedSignature(
+            max_queue_share_p99=min(
+                0.9, ATTR_MARGIN * at_att["p99_shares"]["queue_wait"]),
+            max_prefill_share_p99=min(
+                0.98, ATTR_MARGIN * at_att["p99_shares"]["prefill"]),
+            max_preempted_share=0.0))
+    at_audit.registry.register(attr_rule)
+    at_healthy = at_audit.evaluate(engine_report=at_eng.report())
+    findings.extend(at_healthy)     # calibrated on itself: must be clean
+
+    s_audit, s_eng, s_tokens = at_run(ATTR_ADMIT_EVERY)
+    s_audit.registry.register(attr_rule)
+    s_findings = s_audit.evaluate(engine_report=s_eng.report())
+    s_att = attribution(Evidence(tracer=s_audit.tracer).request_timelines())
+    name = "admission-throttle"
+    hit = [f for f in s_findings
+           if f["kind"] == SEEDS[name] and f["severity"] == "error"]
+    token_identical = bool((s_tokens == at_tokens).all())
+    localized = any("dominant phase: queue_wait" in f["detail"]
+                    for f in hit)
+    detections[name] = {
+        "detected": bool(hit),
+        "expected_kind": SEEDS[name],
+        "findings": s_findings,
+        "token_identical": token_identical,
+        "localized_queue_wait": localized,
+        "healthy_queue_share_p99": round(
+            at_att["p99_shares"]["queue_wait"], 4),
+        "seeded_queue_share_p99": round(
+            s_att["p99_shares"]["queue_wait"], 4),
+        "healthy_dominant": at_att["dominant_phase"],
+        "seeded_dominant": s_att["dominant_phase"],
+    }
+    if not hit:
+        findings.append({
+            "severity": "error", "kind": "audit-detector-miss",
+            "detail": f"seeded misconfiguration {name!r} was not flagged "
+                      f"as {SEEDS[name]} "
+                      f"(got {[f['kind'] for f in s_findings]})"})
+    elif not localized:
+        findings.append({
+            "severity": "error", "kind": "audit-attribution-phase",
+            "detail": f"pathway-attribution fired on {name!r} but did not "
+                      f"name queue_wait as the dominant phase "
+                      f"(seeded dominant: {s_att['dominant_phase']})"})
+    if not token_identical:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-divergence",
+            "detail": f"seeded misconfiguration {name!r} changed the "
+                      f"token stream — it must degrade the pathway, "
+                      f"not the answer"})
+    if (s_att["p99_shares"]["queue_wait"]
+            <= at_att["p99_shares"]["queue_wait"]):
+        findings.append({
+            "severity": "error", "kind": "audit-seed-uncontrasted",
+            "detail": "admission throttle did not inflate the p99 queue "
+                      "share over the healthy run: the seed contrasts "
+                      "nothing"})
 
     # ------------------------------------ request-lifecycle probe: the
     # cancel and sampling pathways must be *visible* in the audit trace

@@ -37,7 +37,14 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
     known = {name for name, _ in SUITES}
     if only and not only <= known:
-        ap.error(f"unknown suite(s): {sorted(only - known)}; "
+        import difflib
+
+        unknown = []
+        for bad in sorted(only - known):
+            close = difflib.get_close_matches(bad, sorted(known), n=1)
+            unknown.append(f"{bad!r} (did you mean {close[0]!r}?)"
+                           if close else repr(bad))
+        ap.error(f"unknown suite(s): {', '.join(unknown)}; "
                  f"registered: {sorted(known)}")
 
     print("name,us_per_call,derived")

@@ -19,10 +19,17 @@ Per family:
      --metrics-port`` exposes over HTTP);
   3. SLO judgement — a calibrated ``ExpectedSignature`` with
      ``p99_ttft_ticks`` / ``p99_decode_gap_ticks`` / ``min_prefix_hit_
-     rate`` bounds; breaches surface as ``pathway-slo`` error findings.
+     rate`` / ``max_preempted_share`` bounds; breaches surface as
+     ``pathway-slo`` / ``pathway-attribution`` error findings.
      All latencies are tick-clock, so the p99s are deterministic and the
      ledger gates them with tight bands; wall-clock throughput rides
-     along ungated (trajectory only).
+     along ungated (trajectory only);
+  4. latency attribution (``audit.timeline``) — every finished request's
+     queue_wait/prefill/decode/preempted/routing decomposition must sum
+     *exactly* to its end-to-end latency (exact rationals), the
+     p99-TTFT phase shares and population preempted share are ledgered
+     with zero tolerance, and the ``/timeline`` Chrome-trace body is
+     fingerprinted alongside ``/metrics``.
 
     PYTHONPATH=src python benchmarks/serve_workloads.py [--smoke]
         [--ledger-dir DIR] [--update-baseline]
@@ -60,21 +67,23 @@ except ImportError:  # pragma: no cover - script path
 SLO_BOUNDS = {
     "smoke": {
         # chat under diurnal bursts preempts at the peak: the recompute
-        # inflates one request's mean gap, hence the wider gap bound
+        # inflates one request's mean gap, hence the wider gap bound and
+        # the only nonzero preempted-share allowance (the share of total
+        # end-to-end latency lost to preemption gaps — audit.timeline)
         "chat-diurnal": {"p99_ttft_ticks": 28.0, "p99_gap_ticks": 5.0,
-                         "min_hit_rate": 0.45},
+                         "min_hit_rate": 0.45, "max_preempted_share": 0.30},
         "rag-heavy-tail": {"p99_ttft_ticks": 16.0, "p99_gap_ticks": 2.0,
-                           "min_hit_rate": 0.55},
+                           "min_hit_rate": 0.55, "max_preempted_share": 0.0},
         "agent-bursty": {"p99_ttft_ticks": 6.0, "p99_gap_ticks": 2.0,
-                         "min_hit_rate": 0.45},
+                         "min_hit_rate": 0.45, "max_preempted_share": 0.0},
     },
     "full": {
         "chat-diurnal": {"p99_ttft_ticks": 66.0, "p99_gap_ticks": 12.0,
-                         "min_hit_rate": 0.55},
+                         "min_hit_rate": 0.55, "max_preempted_share": 0.35},
         "rag-heavy-tail": {"p99_ttft_ticks": 16.0, "p99_gap_ticks": 2.0,
-                           "min_hit_rate": 0.65},
+                           "min_hit_rate": 0.65, "max_preempted_share": 0.0},
         "agent-bursty": {"p99_ttft_ticks": 6.0, "p99_gap_ticks": 2.0,
-                         "min_hit_rate": 0.45},
+                         "min_hit_rate": 0.45, "max_preempted_share": 0.0},
     },
 }
 
@@ -99,7 +108,8 @@ def _slo_rule(name: str, bounds: dict):
         expect=ExpectedSignature(
             p99_ttft_ticks=bounds["p99_ttft_ticks"],
             p99_decode_gap_ticks=bounds["p99_gap_ticks"],
-            min_prefix_hit_rate=bounds["min_hit_rate"]))
+            min_prefix_hit_rate=bounds["min_hit_rate"],
+            max_preempted_share=bounds["max_preempted_share"]))
 
 
 def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
@@ -107,7 +117,7 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
           update_baseline: bool = False) -> dict:
     from repro.audit import (Evidence, EventLog, Ledger, MetricSpec,
                              MetricsServer, RunAudit, ServeMetrics,
-                             nearest_rank)
+                             attribution, nearest_rank)
     from repro.configs import ALL_ARCHS, reduced
     from repro.models import build
     from repro.serve import (PagedServeEngine, compare_engines, generate,
@@ -175,13 +185,33 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
         p99_gap = nearest_rank(gaps, 0.99) if gaps else 0.0
         tps = rep["tokens_out"] / max(wall, 1e-9)
 
+        # ---- 3b. latency attribution (audit.timeline): every finished
+        # request's phase decomposition must sum *exactly* to its
+        # end-to-end tick latency — exact rationals, not float residue —
+        # and the p99-TTFT attribution rides into the ledger
+        timelines = Evidence(tracer=audit.tracer).request_timelines()
+        closed = [tl for tl in timelines.values() if tl.end is not None]
+        share_sum_exact = all(sum(tl.shares().values()) == 1
+                              for tl in closed)
+        if not share_sum_exact:
+            findings.append({
+                "severity": "error",
+                "kind": f"timeline-inexact-{spec.name}",
+                "detail": "per-request phase shares do not sum to 1 "
+                          "exactly: the span partition leaked time"})
+        att = attribution(timelines) or {
+            "p99_shares": {}, "preempted_share": 0.0,
+            "dominant_phase": None, "p99_rid": None}
+
         # the exposition layer is part of the measured pathway: render
         # both formats through the pure handler and fingerprint the
         # bytes — same seed + trace must reproduce them exactly
         server = MetricsServer(metrics.registry, log)
         _, _, prom = server.handle("/metrics")
         _, _, snap = server.handle("/metrics.json")
+        _, _, tline = server.handle("/timeline")
         assert server.handle("/metrics")[2] == prom  # render is pure
+        assert server.handle("/timeline")[2] == tline
 
         key = spec.name.replace("-", "_")
         ledger_metrics.update({
@@ -190,6 +220,12 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
             f"{key}_prefix_hit_rate": float(rep["prefix_hit_rate"]),
             f"{key}_tokens_out": float(rep["tokens_out"]),
             f"{key}_tokens_per_s": round(tps, 1),
+            f"{key}_queue_share_p99": round(
+                att["p99_shares"].get("queue_wait", 0.0), 6),
+            f"{key}_prefill_share_p99": round(
+                att["p99_shares"].get("prefill", 0.0), 6),
+            f"{key}_preempted_share": round(att["preempted_share"], 6),
+            f"{key}_share_sum_exact": 1.0 if share_sum_exact else 0.0,
         })
         families.append({
             "workload": trace.describe(),
@@ -198,9 +234,18 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
             "p99_decode_gap_ticks": round(float(p99_gap), 3),
             "slo": bounds[spec.name],
             "slo_findings": [f for f in fam_findings
-                             if f["kind"] == "pathway-slo"],
+                             if f["kind"] in ("pathway-slo",
+                                              "pathway-attribution")],
             "tokens_per_s": round(tps, 1),
             "preemptions": rep["preemptions"],
+            "attribution": {
+                "dominant_phase": att["dominant_phase"],
+                "p99_rid": att["p99_rid"],
+                "p99_shares": {k: round(v, 4)
+                               for k, v in att["p99_shares"].items()},
+                "preempted_share": round(att["preempted_share"], 4),
+                "share_sum_exact": share_sum_exact,
+            },
             "report": {k: rep[k] for k in
                        ("decode_steps", "tokens_out", "prefix_hit_rate",
                         "cached_tokens", "page_peak_utilization")},
@@ -208,6 +253,7 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
                 "events_logged": len(log),
                 "prometheus_sha256": hashlib.sha256(prom).hexdigest(),
                 "snapshot_sha256": hashlib.sha256(snap).hexdigest(),
+                "timeline_sha256": hashlib.sha256(tline).hexdigest(),
                 "p99_ttft_bucket": metrics.ttft.quantile(0.99),
                 "finished": metrics.finished.value,
             },
@@ -228,7 +274,13 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = True, seed: int = 0,
             elif name.endswith("_prefix_hit_rate"):
                 specs_l.append(MetricSpec(name, higher_is_better=True,
                                           rel_tol=0.05))
-            else:  # tokens_out: exact
+            elif name.endswith(("_queue_share_p99", "_prefill_share_p99",
+                                "_preempted_share")):
+                # attribution shares are deterministic functions of the
+                # tick schedule: any drift is a pathway change
+                specs_l.append(MetricSpec(name, higher_is_better=False,
+                                          rel_tol=0.0))
+            else:  # tokens_out / share_sum_exact: exact
                 specs_l.append(MetricSpec(name, higher_is_better=True,
                                           rel_tol=0.0))
         bench_key = f"serve_workloads_{mode}"

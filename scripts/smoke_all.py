@@ -1,9 +1,11 @@
 """Dev harness: tiny forward/train/prefill/decode for every family on CPU,
 plus the serving-throughput, audit-pathway, workload-SLO, and
-cluster-scaling smokes gated on their diagnostics findings, a ledger
-integrity audit (orphan ``BENCH_*.json`` files are errors), and the
-rolling-median throughput trend over ledger history (a collapse beyond
-``TREND_FACTOR`` is a warn-level finding).
+cluster-scaling smokes gated on their diagnostics findings, a timeline
+determinism check (same seed + trace must render a byte-identical
+``/timeline`` Chrome-trace body, mirroring the ``/metrics``
+byte-identity gate), a ledger integrity audit (orphan ``BENCH_*.json``
+files are errors), and the rolling-median throughput trend over ledger
+history (a collapse beyond ``TREND_FACTOR`` is a warn-level finding).
 
     PYTHONPATH=src python scripts/smoke_all.py [archs...] [--json]
         [--ledger-dir DIR] [--update-baseline] [--artifacts-dir DIR]
@@ -44,6 +46,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCHES = ["serve_throughput", "audit_pathways", "serve_workloads",
            "serve_cluster"]
 
+#: In-process checks that also own ledger keys (no benchmarks/ script):
+#: the timeline determinism gate below ledgers its deterministic
+#: counters under ``serve_timeline_smoke``.
+EXTRA_LEDGER_BENCHES = ["serve_timeline"]
+
 #: Throughput-trend regression factor: the latest ungated wall-clock
 #: throughput sample dropping below median/TREND_FACTOR over the ledger
 #: history window is a warn-level ``perf-trend`` finding — wall time on
@@ -53,8 +60,97 @@ TREND_FACTOR = 1.5
 
 
 def owned_ledger_keys(benches=None) -> list[str]:
-    return [f"{b}_{mode}" for b in (benches or BENCHES)
+    return [f"{b}_{mode}"
+            for b in (benches or BENCHES + EXTRA_LEDGER_BENCHES)
             for mode in ("smoke", "full")]
+
+
+def timeline_smoke(ledger_dir: str, update_baseline: bool) -> dict:
+    """Timeline determinism gate: run the same seeded bursty trace twice
+    through a fresh paged engine + tracer + log and require the
+    ``/timeline`` endpoint to render byte-identical, Perfetto-loadable
+    Chrome-trace JSON, with every closed request's phase shares summing
+    to exactly 1.  Ledgers the deterministic counts under
+    ``serve_timeline_smoke``; returns the report record (``findings``
+    inside, same contract as the benchmark scripts)."""
+    from repro.audit import (EventLog, Ledger, MetricSpec, MetricsServer,
+                             ServeMetrics, Tracer, build_timelines)
+    from repro.serve import PagedServeEngine, WorkloadSpec, generate
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    trace = generate(WorkloadSpec(
+        name="timeline-smoke", family="chat", arrival="bursty",
+        n_requests=6, vocab_size=cfg.vocab_size, seed=13, max_new=4,
+        prefix_len=8, n_streams=2, suffix_lo=2, suffix_hi=4,
+        burst_size=3, burst_gap=8.0, priorities=(0, 1)))
+
+    def run_once():
+        tracer = Tracer()
+        log = EventLog()
+        tracer.subscribe(log.append)
+        metrics = ServeMetrics()
+        metrics.attach(tracer)
+        eng = PagedServeEngine(model, params, slots=2, max_len=48,
+                               block_size=8, chunk=4, tracer=tracer)
+        eng.run(trace.requests(), arrivals=list(trace.arrivals))
+        status, _, body = MetricsServer(
+            metrics.registry, log).handle("/timeline")
+        return status, body, log
+
+    status, body1, log = run_once()
+    _, body2, _ = run_once()
+    findings: list[dict] = []
+    if body1 != body2:
+        findings.append({
+            "severity": "error", "kind": "timeline-nondeterminism",
+            "detail": "two same-seed runs rendered different /timeline "
+                      "bodies: wall-clock state leaked into the "
+                      "Chrome-trace export"})
+    doc = json.loads(body1)
+    valid = (status == 200 and isinstance(doc.get("traceEvents"), list)
+             and bool(doc["traceEvents"])
+             and all("ph" in e and "pid" in e for e in doc["traceEvents"]))
+    if not valid:
+        findings.append({
+            "severity": "error", "kind": "timeline-invalid",
+            "detail": "/timeline body is not valid Chrome trace-event "
+                      "JSON (traceEvents list with ph/pid per event)"})
+    timelines = build_timelines(log)
+    closed = [tl for tl in timelines.values() if tl.end is not None]
+    exact = bool(closed) and all(sum(tl.shares().values()) == 1
+                                 for tl in closed)
+    if not exact:
+        findings.append({
+            "severity": "error", "kind": "timeline-inexact",
+            "detail": "per-request phase shares do not sum to exactly 1 "
+                      "on the smoke trace"})
+
+    ledger = Ledger(ledger_dir)
+    metrics_l = {
+        "timeline_requests": float(len(timelines)),
+        "timeline_events": float(len(doc["traceEvents"])),
+        "timeline_bytes": float(len(body1)),
+        "share_sum_exact": 1.0 if exact else 0.0,
+    }
+    specs = [MetricSpec(n, higher_is_better=True, rel_tol=0.0)
+             for n in metrics_l]
+    res = ledger.compare("serve_timeline_smoke", metrics_l, specs,
+                         update_baseline=update_baseline)
+    findings.extend(res.findings)
+    return {
+        "deterministic": body1 == body2,
+        "valid_chrome_trace": valid,
+        "share_sum_exact": exact,
+        "requests": len(timelines),
+        "events": len(doc["traceEvents"]),
+        "bytes": len(body1),
+        "ledger": {"baseline_written": res.baseline_written,
+                   "deltas": res.deltas,
+                   "path": str(ledger.path("serve_timeline_smoke"))},
+        "findings": findings,
+    }
 
 
 def smoke_arch(name: str) -> dict:
@@ -143,11 +239,15 @@ def main() -> int:
     cluster_rec = run_bench("serve_cluster.py", ledger_flags)
     diag.extend(cluster_rec["findings"], source="serve_cluster")
 
+    timeline_rec = timeline_smoke(args.ledger_dir, args.update_baseline)
+    diag.extend(timeline_rec["findings"], source="serve_timeline")
+
     ledger_deltas = {
         "serve_throughput": serve_rec.get("ledger"),
         "audit_pathways": audit_rec.get("ledger"),
         "serve_workloads": workloads_rec.get("ledger"),
         "serve_cluster": cluster_rec.get("ledger"),
+        "serve_timeline": timeline_rec.get("ledger"),
     }
 
     # ledger integrity + trend: orphan BENCH files are errors; the
@@ -203,6 +303,10 @@ def main() -> int:
             "routed_affinity": cluster_rec["routed_affinity"],
             "shared_hit_rate": cluster_rec["shared_hit_rate"],
             "replica_sweep": cluster_rec["replica_sweep"]},
+        "serve_timeline": {
+            k: timeline_rec[k] for k in
+            ("deterministic", "valid_chrome_trace", "share_sum_exact",
+             "requests", "events", "bytes")},
         "paged_tokens_per_s_trend": throughput_trend,
         "findings": diag.findings,
         "ledger": ledger_deltas,
@@ -242,6 +346,11 @@ def main() -> int:
               f"affinity={cluster_rec['routed_affinity']} "
               f"shared_hit={cluster_rec['shared_hit_rate']} "
               f"oracle_ok={cluster_rec['oracle_ok']}")
+        print(f"OK serve_timeline          "
+              f"deterministic={timeline_rec['deterministic']} "
+              f"valid={timeline_rec['valid_chrome_trace']} "
+              f"share_sum_exact={timeline_rec['share_sum_exact']} "
+              f"requests={timeline_rec['requests']}")
         if throughput_trend:
             print(f"   paged_tokens_per_s     "
                   f"median={throughput_trend['median']} "

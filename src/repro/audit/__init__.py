@@ -22,7 +22,13 @@ idea to runtime behaviour:
                  histograms on the tick clock), a queryable ``EventLog``
                  (JSONL export, filter by kind/rid/tick window), and the
                  ``MetricsServer`` HTTP exposition (``/metrics``,
-                 ``/metrics.json``, ``/healthz``, ``/events``)
+                 ``/metrics.json``, ``/healthz``, ``/events``,
+                 ``/timeline``, ``/requests/<rid>``)
+  timeline     — per-request span-tree reconstruction from the lifecycle
+                 trace: exact phase decomposition (queue_wait / prefill /
+                 decode / preempted / routing sums to the total in ℚ),
+                 p99-TTFT attribution, and a Chrome-trace (Perfetto)
+                 exporter
   report       — folds traces + expectation mismatches + ledger
                  regressions into ``core.diagnostics.Diagnostics`` so
                  CI gates on them
@@ -34,12 +40,17 @@ from repro.audit.ledger import Ledger, LedgerResult, MetricSpec
 from repro.audit.metrics import (EventLog, MetricsRegistry, MetricsServer,
                                  ServeMetrics, query_jsonl)
 from repro.audit.report import RunAudit
+from repro.audit.timeline import (PHASES, RequestTimeline, Span, attribution,
+                                  build_timelines, chrome_trace_bytes,
+                                  to_chrome_trace)
 from repro.audit.trace import KNOWN_KINDS, NULL_TRACER, TraceEvent, Tracer
 
 __all__ = [
     "AuditContext", "DEFAULT_REGISTRY", "EventLog", "Evidence",
     "ExpectationRegistry", "ExpectedSignature", "KNOWN_KINDS", "Ledger",
     "LedgerResult", "MetricSpec", "MetricsRegistry", "MetricsServer",
-    "NULL_TRACER", "Rule", "RunAudit", "ServeMetrics", "TraceEvent",
-    "Tracer", "nearest_rank", "query_jsonl",
+    "NULL_TRACER", "PHASES", "RequestTimeline", "Rule", "RunAudit",
+    "ServeMetrics", "Span", "TraceEvent", "Tracer", "attribution",
+    "build_timelines", "chrome_trace_bytes", "nearest_rank", "query_jsonl",
+    "to_chrome_trace",
 ]

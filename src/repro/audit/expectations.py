@@ -17,6 +17,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from repro.audit.timeline import attribution, build_timelines
 from repro.audit.trace import Tracer
 from repro.core.inspector import COLLECTIVES, TransportReport
 
@@ -50,6 +51,10 @@ class Evidence:
     tracer: Tracer | None = None
     engine_report: dict | None = None      # ServeEngine/PagedServeEngine.report()
     transport: TransportReport | None = None
+    # cluster runs: replica tracers carry the admit/prefill-done/finish
+    # events the cluster tracer never sees; timeline reconstruction
+    # merges them (duplicated submit/route events deduplicate)
+    replica_tracers: Sequence[Tracer] = ()
 
     # ------------------------------------------------- derived accessors
     def engine_kind(self) -> str | None:
@@ -120,6 +125,16 @@ class Evidence:
             out[rid] = rec
         return out
 
+    def request_timelines(self) -> dict:
+        """Per-request phase decomposition (``audit.timeline``) rebuilt
+        from the lifecycle trace: rid -> ``RequestTimeline`` whose
+        ``queue_wait``/``prefill``/``decode``/``preempted``/``routing``
+        spans sum exactly to the end-to-end tick latency.  Subject to
+        the same retained-window caveat as ``request_latencies``."""
+        if self.tracer is None:
+            return {}
+        return build_timelines(self.tracer, *self.replica_tracers)
+
     def compile_counts(self) -> dict[str, int]:
         """Per-jitted-function compile (cache-miss) counts.
 
@@ -183,6 +198,15 @@ class ExpectedSignature:
     # rules calibrated from a healthy affinity run.
     min_routed_affinity: float | None = None
     min_shared_hit_rate: float | None = None
+    # latency *attribution* bounds (audit.timeline): the SLO checks say
+    # a quantile moved, these say *where the time went* — shares of the
+    # p99-TTFT request's first-token latency spent queued / prefilling,
+    # and the population share of end-to-end latency lost to preemption
+    # gaps.  Exact rationals exported as floats; violations are
+    # ``pathway-attribution`` findings naming the dominant phase.
+    max_queue_share_p99: float | None = None
+    max_prefill_share_p99: float | None = None
+    max_preempted_share: float | None = None
     allowed_collectives: frozenset[str] | None = None
     max_collective_group: int | None = None  # default: ctx.n_devices
     forbid_host_transfer: bool = False
@@ -359,6 +383,46 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                             f"p99 inter-token gap {p99:.2f} ticks breaches "
                             f"the {sig.p99_decode_gap_ticks:.2f}-tick SLO "
                             f"({len(gaps)} finished request(s))"))
+
+    if (sig.max_queue_share_p99 is not None
+            or sig.max_prefill_share_p99 is not None
+            or sig.max_preempted_share is not None):
+        att = attribution(ev.request_timelines())
+        shares = att.get("p99_shares", {}) if att else {}
+        if shares:
+            dom = att["dominant_phase"]
+            where = (f"dominant phase: {dom} "
+                     f"({shares.get(dom, 0.0):.0%} of the "
+                     f"{att['p99_ttft_ticks']:.1f}-tick p99 TTFT, "
+                     f"request {att['p99_rid']})")
+            if (sig.max_queue_share_p99 is not None
+                    and shares.get("queue_wait", 0.0)
+                    > sig.max_queue_share_p99):
+                out.append(_find(
+                    rule, "pathway-attribution",
+                    f"queue_wait holds {shares['queue_wait']:.0%} of the "
+                    f"p99-TTFT request's latency "
+                    f"(> {sig.max_queue_share_p99:.0%}); {where} — "
+                    f"admission, not compute, is the bottleneck (token "
+                    f"streams stay identical)"))
+            if (sig.max_prefill_share_p99 is not None
+                    and shares.get("prefill", 0.0)
+                    > sig.max_prefill_share_p99):
+                out.append(_find(
+                    rule, "pathway-attribution",
+                    f"prefill holds {shares['prefill']:.0%} of the "
+                    f"p99-TTFT request's latency "
+                    f"(> {sig.max_prefill_share_p99:.0%}); {where} — "
+                    f"prompt processing dominates the tail (chunking or "
+                    f"prefix-cache pathway degraded)"))
+        if (att and sig.max_preempted_share is not None
+                and att["preempted_share"] > sig.max_preempted_share):
+            out.append(_find(
+                rule, "pathway-attribution",
+                f"preemption gaps hold {att['preempted_share']:.0%} of "
+                f"total end-to-end latency across {att['requests']} "
+                f"request(s) (> {sig.max_preempted_share:.0%}): the "
+                f"scheduler is thrashing admitted work"))
 
     rep = ev.engine_report or {}
     if sig.min_routed_affinity is not None:

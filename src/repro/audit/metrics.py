@@ -19,7 +19,10 @@ while the server is running, in the spirit of the paper's continuous
   read-side contract a log service exposes to operators).
 - ``MetricsServer`` — a stdlib ``http.server`` endpoint: ``/metrics``
   (Prometheus text exposition), ``/metrics.json`` (snapshot),
-  ``/healthz``, and ``/events`` (filtered JSONL).  Routing is a pure
+  ``/healthz``, ``/events`` (filtered JSONL), ``/timeline``
+  (Chrome-trace JSON of the reconstructed per-request timelines —
+  ``audit.timeline``), and ``/requests/<rid>`` (one request's full
+  event history + phase decomposition).  Routing is a pure
   ``handle(path)`` function so tests exercise the full endpoint
   contract without binding a port; ``serve()`` binds it for real
   (``launch.serve --metrics-port``).
@@ -34,6 +37,7 @@ from collections import deque
 from typing import Any, Callable, Iterable
 from urllib.parse import parse_qs, urlsplit
 
+from repro.audit.timeline import build_timelines, chrome_trace_bytes
 from repro.audit.trace import TraceEvent, Tracer
 
 # --------------------------------------------------------------- buckets
@@ -278,6 +282,11 @@ class EventLog:
     def __len__(self) -> int:
         return len(self._events)
 
+    def records(self) -> list[dict]:
+        """The retained payload dicts in emission order (the timeline
+        layer's event-source contract)."""
+        return list(self._events)
+
     @staticmethod
     def _tick(rec: dict) -> float:
         return rec.get("tick", rec.get("t", 0.0))
@@ -520,6 +529,31 @@ class MetricsServer:
                 return 400, "text/plain", f"bad query: {e}\n".encode()
             body = self.log.dumps(**filters).encode()
             return 200, "application/x-ndjson", body
+        if route == "/timeline":
+            if self.log is None:
+                return 404, "text/plain", b"no event log attached\n"
+            body = chrome_trace_bytes(build_timelines(self.log))
+            return 200, "application/json", body
+        if route.startswith("/requests/"):
+            if self.log is None:
+                return 404, "text/plain", b"no event log attached\n"
+            try:
+                rid = int(route.rsplit("/", 1)[1])
+            except ValueError:
+                return 400, "text/plain", b"bad request id\n"
+            recs = self.log.query(rid=rid)
+            if not recs:
+                return (404, "text/plain",
+                        f"no events for rid {rid}\n".encode())
+            tl = build_timelines(recs).get(rid)
+            # strip the wall-clock stamp so the body, like /metrics, is a
+            # deterministic function of the tick-clock trace
+            doc = {"rid": rid,
+                   "events": [{k: v for k, v in r.items() if k != "t"}
+                              for r in recs],
+                   "timeline": None if tl is None else tl.describe()}
+            body = (json.dumps(doc, sort_keys=True, indent=1) + "\n").encode()
+            return 200, "application/json", body
         return 404, "text/plain", f"unknown path {route!r}\n".encode()
 
     def _json_snapshot(self) -> tuple[int, str, bytes]:

@@ -34,8 +34,8 @@ from typing import Any, Callable, Iterator
 #: emitter without declaring its kind.
 KNOWN_KINDS = frozenset({
     # serve.engine — request lifecycle + hot loop (both engines)
-    "engine-init", "submit", "admit", "first-token", "step", "preempt",
-    "finish", "cancel", "compile",
+    "engine-init", "submit", "admit", "prefill-done", "first-token", "step",
+    "preempt", "finish", "cancel", "compile",
     # serve.scheduler — planning decisions
     "sched-admit", "sched-readmit", "sched-preempt", "sched-done",
     "sched-cancel",
@@ -102,17 +102,21 @@ class Tracer:
 
     @contextmanager
     def span(self, kind: str, /, **data: Any) -> Iterator[dict]:
-        """Scoped span: emits ``kind`` once on exit with ``dt_s`` measured
-        wall-clock duration.  The yielded dict lets the body attach
-        results (e.g. a loss value) to the closing event; body keys
-        override span kwargs on collision, and ``dt_s`` always wins."""
-        t0 = time.perf_counter()
+        """Scoped span: emits ``kind`` once on exit carrying both the
+        entry clock reading (``t_start``) and the measured duration
+        (``dt_s``), so span trees reconstruct without inferring starts.
+        Reads the tracer's injected ``clock`` — under a synthetic tick
+        clock the payload is deterministic.  The yielded dict lets the
+        body attach results (e.g. a loss value) to the closing event;
+        body keys override span kwargs on collision, and
+        ``t_start``/``dt_s`` always win."""
+        t0 = self.clock()
         extra: dict = {}
         try:
             yield extra
         finally:
-            self.emit(kind, **{**data, **extra,
-                               "dt_s": time.perf_counter() - t0})
+            self.emit(kind, **{**data, **extra, "t_start": t0,
+                               "dt_s": self.clock() - t0})
 
     # -------------------------------------------------------------- query
     def events(self, kind: str | None = None) -> list[TraceEvent]:

@@ -24,22 +24,31 @@ policy; ``random`` deliberately misroutes so operators can watch the
 (``audit.metrics.MetricsServer``): a ``ServeMetrics`` registry and an
 ``EventLog`` subscribe to the audit tracer, so ``/metrics`` (Prometheus
 text), ``/metrics.json`` (snapshot with deterministic quantiles),
-``/events`` (filtered JSONL), and ``/healthz`` reflect the run as it
-happens.  Port 0 picks an ephemeral port (reported in the output);
-``--metrics-linger`` keeps the endpoint up after the drain so an
-operator can scrape the finished run.
+``/events`` (filtered JSONL), ``/timeline`` (Chrome-trace JSON of the
+reconstructed per-request phase timelines), ``/requests/<rid>`` (one
+request's history + phase decomposition), and ``/healthz`` reflect the
+run as it happens.  Port 0 picks an ephemeral port (reported in the
+output); ``--metrics-linger`` keeps the endpoint up after the drain so
+an operator can scrape the finished run.
+
+``--trace-out FILE`` writes the same Chrome-trace-event JSON to disk
+after the drain — load it in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing`` to see one track per replica/slot plus a queue
+track (see ``docs/observability.md``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro.audit import (AuditContext, Evidence, EventLog, MetricsServer,
-                         RunAudit, ServeMetrics, Tracer)
+                         RunAudit, ServeMetrics, Tracer, attribution,
+                         build_timelines, chrome_trace_bytes)
 from repro.configs.base import reduced
 from repro.core.registry import resolve_arch
 from repro.models import build
@@ -54,9 +63,12 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           use_prefix_cache: bool = True, kernel: str = "paged",
           replicas: int = 1, routing: str = "affinity",
           audit: bool = True, metrics_port: int | None = None,
-          metrics_linger: float = 0.0,
+          metrics_linger: float = 0.0, trace_out: str | None = None,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0) -> dict:
+    if trace_out is not None and not audit:
+        raise ValueError("--trace-out reconstructs timelines from the "
+                         "audit tracer; drop --no-audit")
     cfg = reduced(resolve_arch(arch))
     model = build(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
@@ -96,6 +108,11 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
                          labels={"replica": str(i)}).attach(rt)
         log = EventLog()
         tracer.subscribe(log.append)
+        # replica tracers carry the admit/prefill-done/finish lifecycle
+        # a cluster's front tracer never sees — /timeline and
+        # /requests/<rid> need the merged stream
+        for rt in replica_tracers:
+            rt.subscribe(log.append)
         server = MetricsServer(metrics.registry, log)
         bound_port = server.serve(port=metrics_port)
     if is_cluster:
@@ -158,6 +175,22 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
             ttft_ticks = [l["ttft_ticks"] for l in lat.values()]
             out["mean_ttft_ticks"] = round(float(np.mean(ttft_ticks)), 2)
             out["max_ttft_ticks"] = round(float(np.max(ttft_ticks)), 2)
+        timelines = build_timelines(tracer, *replica_tracers)
+        att = attribution(timelines)
+        if att:
+            out["attribution"] = {
+                "p99_ttft_ticks": att["p99_ttft_ticks"],
+                "dominant_phase": att["dominant_phase"],
+                "p99_shares": {k: round(v, 3)
+                               for k, v in att["p99_shares"].items()},
+                "preempted_share": round(att["preempted_share"], 3),
+            }
+        if trace_out is not None:
+            data = chrome_trace_bytes(timelines)
+            Path(trace_out).write_bytes(data)
+            out["trace_out"] = {"path": trace_out,
+                                "requests": len(timelines),
+                                "bytes": len(data)}
         diag = run_audit.finish(engine_report=eng.report(), source="serve")
         out["audit"] = {
             "findings": diag.findings,
@@ -170,7 +203,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         out["metrics"] = {
             "port": bound_port,
             "endpoints": ["/metrics", "/metrics.json", "/events",
-                          "/healthz"],
+                          "/timeline", "/requests/<rid>", "/healthz"],
             "finished": metrics.finished.value,
             "p99_ttft_bucket": metrics.ttft.quantile(0.99),
         }
@@ -230,6 +263,10 @@ def main() -> None:
     ap.add_argument("--metrics-linger", type=float, default=0.0,
                     help="seconds to keep the metrics endpoint up after "
                          "the drain completes")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the per-request phase timelines as "
+                         "Chrome-trace-event JSON (open in Perfetto or "
+                         "chrome://tracing); needs the audit tracer")
     args = ap.parse_args()
     res = serve(args.arch, n_requests=args.requests,
                 slots=args.slots, max_len=args.max_len,
@@ -240,6 +277,7 @@ def main() -> None:
                 replicas=args.replicas, routing=args.routing,
                 audit=args.audit, metrics_port=args.metrics_port,
                 metrics_linger=args.metrics_linger,
+                trace_out=args.trace_out,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, sampling_seed=args.sampling_seed)
     print(json.dumps(res, indent=1))

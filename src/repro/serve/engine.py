@@ -178,8 +178,13 @@ class ServeEngine:
         req.t_first = time.perf_counter()
         self._last_token[slot, 0] = nxt
         self.active[slot] = req
-        self.trace.emit("admit", rid=req.rid, slot=slot,
+        # the serial prefill completes inside the admission tick, so the
+        # admit / prefill-done / first-token boundaries coincide — the
+        # timeline layer orders them by kind within the tick
+        self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
                         prompt_tokens=len(tokens), cached_tokens=0)
+        self.trace.emit("prefill-done", rid=req.rid, tick=self.now,
+                        slot=slot, consumed=len(tokens))
         self.trace.emit("first-token", rid=req.rid, tick=self.now,
                         ttft_ticks=self.now - arrival)
 
@@ -776,6 +781,11 @@ class PagedServeEngine:
                 self._register_blocks(slot, st)
                 if st.pending:
                     continue        # mid-prefill: this lane's sample unused
+                # prompt fully consumed this tick: the prefill→decode
+                # phase boundary (re-fires after a preempt/readmit
+                # recompute, unlike first-token)
+                self.trace.emit("prefill-done", rid=req.rid, tick=self.now,
+                                slot=slot, consumed=st.consumed)
             tok = int(nxt[slot])
             req.out.append(tok)
             self.stats.tokens_out += 1

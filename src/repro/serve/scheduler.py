@@ -150,6 +150,7 @@ class Scheduler:
         e.t_admitted = self.clock()
         self.stats.admissions += 1
         self.trace.emit("sched-readmit" if readmit else "sched-admit",
+                        rid=getattr(e.req, "rid", None),
                         seq=e.seq, priority=e.priority, slot=slot,
                         held_pages=held_pages,
                         wait=e.t_admitted - e.arrival)
@@ -157,7 +158,8 @@ class Scheduler:
     def mark_preempted(self, e: SchedEntry) -> None:
         self.running.remove(e)
         self.waiting.append(e)
-        self.trace.emit("sched-preempt", seq=e.seq, priority=e.priority,
+        self.trace.emit("sched-preempt", rid=getattr(e.req, "rid", None),
+                        seq=e.seq, priority=e.priority,
                         slot=e.slot, released_pages=e.held_pages)
         e.state, e.slot, e.held_pages = PREEMPTED, None, 0
         e.preemptions += 1
@@ -166,7 +168,8 @@ class Scheduler:
     def mark_done(self, e: SchedEntry) -> None:
         self.running.remove(e)
         e.state, e.slot, e.held_pages = DONE, None, 0
-        self.trace.emit("sched-done", seq=e.seq, priority=e.priority)
+        self.trace.emit("sched-done", rid=getattr(e.req, "rid", None),
+                        seq=e.seq, priority=e.priority)
 
     def mark_cancelled(self, e: SchedEntry) -> None:
         """Drop an entry at any pre-DONE stage.  The engine releases the
@@ -181,5 +184,5 @@ class Scheduler:
         was = e.state
         e.state, e.slot, e.held_pages = CANCELLED, None, 0
         self.stats.cancellations += 1
-        self.trace.emit("sched-cancel", seq=e.seq, priority=e.priority,
-                        was=was)
+        self.trace.emit("sched-cancel", rid=getattr(e.req, "rid", None),
+                        seq=e.seq, priority=e.priority, was=was)

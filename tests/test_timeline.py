@@ -1,0 +1,316 @@
+"""Timeline reconstruction: exact phase decomposition of per-request
+latency from the Tracer event stream.
+
+Synthetic-record tests pin the state machine (routing, preemption,
+cancellation at every lifecycle stage, in-flight requests, TTFT
+clipping, cluster-mirrored duplicates) and the Chrome-trace export;
+the slow property test drives every workload family through all three
+engines and asserts the decomposition's defining invariant — phase
+shares sum to *exactly* 1 for every closed request, in ℚ, not within
+float tolerance.
+"""
+from fractions import Fraction
+
+import jax
+import pytest
+
+from repro.audit import (PHASES, Tracer, attribution, build_timelines,
+                         chrome_trace_bytes, to_chrome_trace)
+from repro.audit.metrics import EventLog
+from repro.audit.trace import TraceEvent
+from repro.serve import (ClusterEngine, PagedServeEngine, Request,
+                         ServeEngine, generate, smoke_specs)
+
+GEOM = dict(slots=2, max_len=64, block_size=8, chunk=4)
+MAX_NEW = 4
+
+
+def _ev(seq, kind, **data):
+    return TraceEvent(seq=seq, t=float(seq), kind=kind, data=data)
+
+
+def _tl(records):
+    """Build from a raw iterable of TraceEvents (one of the accepted
+    source shapes)."""
+    return build_timelines(records)
+
+
+# ------------------------------------------------------ exact decomposition
+
+
+def test_phases_partition_total_with_fractional_ticks():
+    tls = _tl([
+        _ev(0, "submit", rid=7, arrival=0.25),
+        _ev(1, "admit", rid=7, slot=1, tick=3.5),
+        _ev(2, "prefill-done", rid=7, slot=1, tick=5.0),
+        _ev(3, "first-token", rid=7, tick=5.0),
+        _ev(4, "finish", rid=7, tick=12.75, tokens_out=8),
+    ])
+    tl = tls[7]
+    assert tl.arrival == Fraction(1, 4)
+    assert tl.total() == Fraction(25, 2)
+    ph = tl.phases()
+    assert ph["queue_wait"] == Fraction(13, 4)
+    assert ph["prefill"] == Fraction(3, 2)
+    assert ph["decode"] == Fraction(31, 4)
+    assert sum(ph.values()) == tl.total()          # telescoping, exact
+    assert sum(tl.shares().values()) == 1          # exactly 1 in Q
+    assert tl.outcome == "finished" and tl.tokens_out == 8
+    assert tl.slots == [1]
+
+
+def test_routing_phase_and_mirrored_duplicates_dedup():
+    # cluster front door mirrors submit/route into the replica tracer;
+    # feeding both streams must not double any span
+    front = [
+        _ev(0, "submit", rid=3, arrival=0.0),
+        _ev(1, "route", rid=3, tick=2.0, replica=1),
+    ]
+    replica = [
+        _ev(0, "route", rid=3, tick=2.0, replica=1),
+        _ev(1, "admit", rid=3, slot=0, tick=4.0),
+        _ev(2, "prefill-done", rid=3, slot=0, tick=5.0),
+        _ev(3, "first-token", rid=3, tick=5.0),
+        _ev(4, "finish", rid=3, tick=9.0),
+    ]
+    tl = build_timelines(front, replica)[3]
+    assert tl.replica == 1
+    ph = tl.phases()
+    assert ph["routing"] == 2 and ph["queue_wait"] == 2
+    assert ph["prefill"] == 1 and ph["decode"] == 4
+    assert sum(tl.shares().values()) == 1
+    # exactly one routing span despite the mirrored route event
+    assert sum(1 for s in tl.spans if s.phase == "routing") == 1
+
+
+def test_preempt_readmit_pays_gap_into_preempted_and_recompute_into_prefill():
+    tls = _tl([
+        _ev(0, "submit", rid=1, arrival=0.0),
+        _ev(1, "admit", rid=1, slot=0, tick=1.0),
+        _ev(2, "prefill-done", rid=1, slot=0, tick=2.0),
+        _ev(3, "first-token", rid=1, tick=2.0),
+        _ev(4, "preempt", rid=1, tick=4.0),
+        _ev(5, "admit", rid=1, slot=1, tick=7.0),
+        _ev(6, "prefill-done", rid=1, slot=1, tick=9.0),   # recompute
+        _ev(7, "finish", rid=1, tick=11.0),
+    ])
+    tl = tls[1]
+    assert tl.preemptions == 1 and tl.slots == [0, 1]
+    ph = tl.phases()
+    assert ph["preempted"] == 3                   # eviction -> readmission
+    assert ph["prefill"] == 1 + 2                 # both segments, recompute too
+    assert ph["decode"] == 2 + 2
+    assert sum(ph.values()) == tl.total() == 11
+    # first-token is not re-fired semantics: ttft stays at the first one
+    assert tl.ttft() == 2
+
+
+def test_cancel_at_each_lifecycle_stage():
+    waiting = _tl([
+        _ev(0, "submit", rid=0, arrival=0.0),
+        _ev(1, "cancel", rid=0, tick=5.0),
+    ])[0]
+    assert waiting.outcome == "cancelled"
+    assert waiting.phases()["queue_wait"] == waiting.total() == 5
+
+    mid_prefill = _tl([
+        _ev(0, "submit", rid=0, arrival=0.0),
+        _ev(1, "admit", rid=0, slot=0, tick=2.0),
+        _ev(2, "cancel", rid=0, tick=6.0),
+    ])[0]
+    ph = mid_prefill.phases()
+    assert ph["queue_wait"] == 2 and ph["prefill"] == 4
+    assert sum(mid_prefill.shares().values()) == 1
+
+    while_preempted = _tl([
+        _ev(0, "submit", rid=0, arrival=0.0),
+        _ev(1, "admit", rid=0, slot=0, tick=1.0),
+        _ev(2, "prefill-done", rid=0, slot=0, tick=2.0),
+        _ev(3, "preempt", rid=0, tick=3.0),
+        _ev(4, "cancel", rid=0, tick=8.0),
+    ])[0]
+    ph = while_preempted.phases()
+    assert ph["preempted"] == 5 and ph["decode"] == 1
+    assert sum(while_preempted.shares().values()) == 1
+
+
+def test_in_flight_request_reports_open_phase_not_shares():
+    tl = _tl([
+        _ev(0, "submit", rid=2, arrival=0.0),
+        _ev(1, "admit", rid=2, slot=0, tick=3.0),
+    ])[2]
+    assert tl.end is None and tl.outcome == "in-flight"
+    assert tl.open_phase == "prefill" and tl.open_since == 3
+    assert tl.shares() == {}                      # no total to share against
+    assert "open_phase" in tl.describe()
+
+
+def test_ttft_shares_clip_at_first_token():
+    tl = _tl([
+        _ev(0, "submit", rid=5, arrival=0.0),
+        _ev(1, "admit", rid=5, slot=0, tick=6.0),
+        _ev(2, "prefill-done", rid=5, slot=0, tick=8.0),
+        _ev(3, "first-token", rid=5, tick=8.0),
+        _ev(4, "finish", rid=5, tick=100.0),
+    ])[5]
+    assert tl.ttft() == 8
+    ts = tl.ttft_shares()
+    assert ts["queue_wait"] == Fraction(3, 4)     # 6/8, decode excluded
+    assert ts["prefill"] == Fraction(1, 4)
+    assert ts["decode"] == 0
+    assert sum(ts.values()) == 1
+
+
+def test_non_lifecycle_kinds_and_untagged_events_are_ignored():
+    tls = _tl([
+        _ev(0, "engine-init", engine="paged"),
+        _ev(1, "submit", rid=0, arrival=0.0),
+        _ev(2, "sched-admit", rid=0, tick=1.0),   # scheduler, not lifecycle
+        _ev(3, "admit", rid=0, slot=0, tick=1.0),
+        _ev(4, "step", tick=2.0, active=1),       # no rid
+        _ev(5, "prefill-done", rid=0, slot=0, tick=2.0),
+        _ev(6, "finish", rid=0, tick=4.0),
+    ])
+    assert list(tls) == [0]
+    assert sum(tls[0].shares().values()) == 1
+
+
+# --------------------------------------------------------------- attribution
+
+
+def test_attribution_names_dominant_phase_of_p99_request():
+    recs = []
+    seq = 0
+    # rid 0: fast, decode-dominant; rid 1: slow, queue-dominant
+    for rid, (admit, done, fin) in {0: (1.0, 2.0, 6.0),
+                                    1: (9.0, 10.0, 12.0)}.items():
+        recs += [_ev(seq, "submit", rid=rid, arrival=0.0),
+                 _ev(seq + 1, "admit", rid=rid, slot=0, tick=admit),
+                 _ev(seq + 2, "prefill-done", rid=rid, slot=0, tick=done),
+                 _ev(seq + 3, "first-token", rid=rid, tick=done),
+                 _ev(seq + 4, "finish", rid=rid, tick=fin)]
+        seq += 5
+    att = attribution(_tl(recs))
+    assert att["requests"] == 2
+    assert att["p99_rid"] == 1 and att["p99_ttft_ticks"] == 10.0
+    assert att["dominant_phase"] == "queue_wait"
+    assert att["p99_shares"]["queue_wait"] == 0.9
+    assert attribution({}) == {}
+
+
+# -------------------------------------------------------------- chrome trace
+
+
+def test_chrome_trace_is_valid_and_byte_deterministic():
+    recs = [
+        _ev(0, "submit", rid=0, arrival=0.0),
+        _ev(1, "route", rid=0, tick=1.0, replica=2),
+        _ev(2, "admit", rid=0, slot=1, tick=2.0),
+        _ev(3, "prefill-done", rid=0, slot=1, tick=3.0),
+        _ev(4, "finish", rid=0, tick=5.0),
+    ]
+    doc = to_chrome_trace(_tl(recs))
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    ms = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert xs and ms
+    assert all(e["pid"] == 2 for e in xs)         # replica label -> pid
+    assert {e["name"] for e in xs} == {"routing", "queue_wait",
+                                       "prefill", "decode"}
+    # off-slot spans ride the synthetic queue track; on-slot spans the slot
+    by_name = {e["name"]: e for e in xs}
+    assert by_name["prefill"]["tid"] == 1
+    assert by_name["queue_wait"]["tid"] != 1
+    assert by_name["prefill"]["ts"] == 2000.0     # tick_us scaling
+    assert by_name["prefill"]["dur"] == 1000.0
+    assert chrome_trace_bytes(_tl(recs)) == chrome_trace_bytes(_tl(recs))
+
+
+# ---------------------------------------------- property: engines x families
+
+
+def _close_all(timelines, n_requests):
+    assert len(timelines) == n_requests
+    for tl in timelines.values():
+        assert tl.end is not None, tl.rid
+        assert sum(tl.phases().values()) == tl.total()
+        assert sum(tl.shares().values()) == 1
+        for a, b in zip(tl.spans, tl.spans[1:]):
+            assert a.end == b.start               # spans telescope
+        assert all(s.phase in PHASES for s in tl.spans)
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec_idx", [0, 1, 2],
+                         ids=["chat", "rag", "agent"])
+def test_shares_sum_to_exactly_one_across_engines(served, spec_idx):
+    cfg, model, params = served
+    spec = smoke_specs(vocab_size=cfg.vocab_size, seed=0)[spec_idx]
+    trace = generate(spec)
+
+    def reqs():
+        out = trace.requests()
+        for r in out:
+            r.max_new = MAX_NEW
+        return out
+
+    # contiguous oracle
+    tr = Tracer()
+    eng = ServeEngine(model, params, slots=GEOM["slots"],
+                      max_len=GEOM["max_len"], tracer=tr)
+    eng.run(reqs(), arrivals=list(trace.arrivals))
+    _close_all(build_timelines(tr), spec.n_requests)
+
+    # paged engine, fed through an EventLog to cover that source shape
+    tr = Tracer()
+    log = EventLog()
+    tr.subscribe(log.append)
+    eng = PagedServeEngine(model, params, tracer=tr, **GEOM)
+    eng.run(reqs(), arrivals=list(trace.arrivals))
+    tls = build_timelines(log)
+    _close_all(tls, spec.n_requests)
+    assert all(tl.preemptions >= 0 for tl in tls.values())
+
+    # cluster: front-door tracer + per-replica tracers merge
+    tr = Tracer()
+    reps = [Tracer(), Tracer()]
+    eng = ClusterEngine(model, params, replicas=2, tracer=tr,
+                        replica_tracers=reps, **GEOM)
+    eng.run(reqs(), arrivals=list(trace.arrivals))
+    tls = build_timelines(tr, *reps)
+    _close_all(tls, spec.n_requests)
+    assert all(tl.replica in (0, 1) for tl in tls.values())
+
+
+@pytest.mark.slow
+def test_cancel_and_preempt_paths_stay_exact(served):
+    _, model, params = served
+    tr = Tracer()
+    eng = PagedServeEngine(model, params, tracer=tr, slots=1, max_len=64,
+                           block_size=8, chunk=4)
+    h_run = eng.submit(Request(rid=0, prompt=[3, 4, 5, 6], max_new=6),
+                       arrival=0.0)
+    h_wait = eng.submit(Request(rid=1, prompt=[7, 8, 9], max_new=4),
+                        arrival=0.0)
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(h_wait)                     # cancelled while queued
+    while not h_run.req.finished:
+        eng.step()
+    tls = build_timelines(tr)
+    assert tls[0].outcome == "finished"
+    assert tls[1].outcome == "cancelled"
+    wait_ph = tls[1].phases()
+    assert wait_ph["queue_wait"] == tls[1].total()   # never admitted
+    for tl in tls.values():
+        assert sum(tl.shares().values()) == 1
