@@ -47,7 +47,15 @@ as an error:
      queue_wait, not prefill, dominates (``pathway-attribution``),
      against share bounds calibrated from the healthy run of the same
      trace.  This is the layer that turns "an SLO regressed" into
-     "queue wait ate the p99".
+     "queue wait ate the p99";
+  9. swap tier disabled under the same bursty overload: preemption
+     still fires, but every readmission re-prefills prompt +
+     generated-so-far instead of swapping the victim's host-parked KV
+     pages back in.  Recompute reproduces the identical streams by
+     construction, so no output check can see it — caught by
+     ``pathway-tiering`` expectations (restore-rate floor and
+     recompute-token ceiling) calibrated from the healthy swap-on run
+     of the same trace.
 
 A request-lifecycle probe additionally runs sampled + cancelled requests
 through the audited pathway and gates on their events being visible in
@@ -96,6 +104,7 @@ SEEDS = {
     "bursty-overload-no-preemption": "pathway-slo",
     "random-routing": "pathway-routing",
     "admission-throttle": "pathway-attribution",
+    "swap-disabled-recompute": "pathway-tiering",
 }
 
 #: Routing floors as fractions of the healthy affinity run's values
@@ -294,14 +303,15 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
             r.max_new = LOW_MAX_NEW     # the lows run long
         return reqs
 
-    def ov_run(preemption: bool):
+    def ov_run(preemption: bool, swap: bool = True):
         a = RunAudit(_ctx(cfg))
         e = PagedServeEngine(model, params, preemption=preemption,
-                             tracer=a.tracer, **ov_geom)
+                             swap=swap, tracer=a.tracer, **ov_geom)
         d = e.run(ov_requests(), arrivals=list(ov_trace.arrivals))
         return a, e, token_matrix(d, ov_spec.n_requests, LOW_MAX_NEW)
 
     ov_audit, ov_eng, ov_tokens = ov_run(preemption=True)
+    ov_rep = ov_eng.report()
     ov_lat = Evidence(tracer=ov_audit.tracer).request_latencies()
     from repro.audit import nearest_rank
     ov_p99 = nearest_rank(
@@ -310,8 +320,19 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
         name="bench-burst-slo", families=("dense", "moe"),
         workloads=("bench:audit_pathways",),
         expect=ExpectedSignature(p99_ttft_ticks=TTFT_MARGIN * ov_p99))
+    # tiering expectations calibrated from the same healthy run: the
+    # swap-on baseline restores its own preempted work, so half its
+    # restore rate is a generous floor and its recompute count an exact
+    # ceiling (the healthy run trivially satisfies both).
+    tier_rule = Rule(
+        name="bench-swap-tiering", families=("dense", "moe"),
+        workloads=("bench:audit_pathways",),
+        expect=ExpectedSignature(
+            min_swap_restore_rate=0.5 * ov_rep["swap_restore_rate"],
+            max_recompute_tokens=int(ov_rep["recompute_tokens"])))
     ov_audit.registry.register(slo_rule)
-    ov_healthy = ov_audit.evaluate(engine_report=ov_eng.report())
+    ov_audit.registry.register(tier_rule)
+    ov_healthy = ov_audit.evaluate(engine_report=ov_rep)
     findings.extend(ov_healthy)     # calibrated on itself: must be clean
 
     s_audit, s_eng, s_tokens = ov_run(preemption=False)
@@ -350,6 +371,49 @@ def bench(arch: str = "deepseek-7b", *, smoke: bool = False, seed: int = 0,
             "severity": "error", "kind": "audit-seed-uncontrasted",
             "detail": "bursty-overload trace never triggered preemption "
                       "in the healthy run: the seed contrasts nothing"})
+
+    # --------------------- seed 9: swap tier disabled, preemption kept.
+    # Same bursty trace, preemption on, ``swap=False``: victims drop
+    # their pages on eviction and readmission re-prefills everything
+    # previously computed.  Recompute reproduces the identical streams
+    # (that equivalence is the engine's readmission contract), so the
+    # degradation is invisible to every output check — the calibrated
+    # restore-rate floor and recompute ceiling must flag it.
+    t_audit, t_eng, t_tokens = ov_run(preemption=True, swap=False)
+    t_audit.registry.register(tier_rule)
+    t_rep = t_eng.report()
+    t_findings = t_audit.evaluate(engine_report=t_rep)
+    name = "swap-disabled-recompute"
+    hit = [f for f in t_findings
+           if f["kind"] == SEEDS[name] and f["severity"] == "error"]
+    token_identical = bool((t_tokens == ov_tokens).all())
+    detections[name] = {
+        "detected": bool(hit),
+        "expected_kind": SEEDS[name],
+        "findings": t_findings,
+        "token_identical": token_identical,
+        "healthy_restore_rate": ov_rep["swap_restore_rate"],
+        "healthy_recompute_tokens": ov_rep["recompute_tokens"],
+        "seeded_restore_rate": t_rep["swap_restore_rate"],
+        "seeded_recompute_tokens": t_rep["recompute_tokens"],
+    }
+    if not hit:
+        findings.append({
+            "severity": "error", "kind": "audit-detector-miss",
+            "detail": f"seeded misconfiguration {name!r} was not flagged "
+                      f"as {SEEDS[name]} "
+                      f"(got {[f['kind'] for f in t_findings]})"})
+    if not token_identical:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-divergence",
+            "detail": f"seeded misconfiguration {name!r} changed the "
+                      f"token stream — recompute-on-readmit must "
+                      f"reproduce the swap-restored streams exactly"})
+    if ov_rep["restored_tokens"] == 0:
+        findings.append({
+            "severity": "error", "kind": "audit-seed-uncontrasted",
+            "detail": "healthy bursty run never restored swapped pages: "
+                      "the tiering seed contrasts nothing"})
 
     # --------------------- seed 7: random routing on a 3-replica cluster.
     # The same multi-tenant chat trace (shared prefixes + arrivals spread

@@ -21,6 +21,7 @@ SUITES = [
     ("audit_pathways", "benchmarks.audit_pathways"),  # runtime audit gate
     ("serve_workloads", "benchmarks.serve_workloads"),  # workload-family SLOs
     ("serve_cluster", "benchmarks.serve_cluster"),  # replica scaling + routing
+    ("serve_tiering", "benchmarks.serve_tiering"),  # KV swap tier vs recompute
 ]
 
 

@@ -8,12 +8,13 @@
 #      and scripts/ must be declared in audit.trace.KNOWN_KINDS
 #   2. tier-1 pytest  — the full unit/integration suite (-x -q)
 #   3. smoke_all      — every family forward/train/prefill/decode plus
-#      the serving, audit-pathway, workload-SLO, and cluster benchmarks
-#      and the timeline determinism gate (same seed must render a
-#      byte-identical /timeline Chrome trace with exact phase-share
-#      sums), gated on Diagnostics findings (ledger orphans + perf
-#      trend included); --json keeps the machine-readable report on
-#      stdout
+#      the serving, audit-pathway, workload-SLO, cluster, and
+#      KV-tiering benchmarks (swap-restore must be token-exact and
+#      ledger a positive restore rate) and the timeline determinism
+#      gate (same seed must render a byte-identical /timeline Chrome
+#      trace with exact phase-share sums), gated on Diagnostics
+#      findings (ledger orphans + perf trend included); --json keeps
+#      the machine-readable report on stdout
 # Any extra arguments (e.g. --artifacts-dir DIR) pass through to
 # scripts/smoke_all.py.
 set -euo pipefail

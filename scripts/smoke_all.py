@@ -1,6 +1,7 @@
 """Dev harness: tiny forward/train/prefill/decode for every family on CPU,
-plus the serving-throughput, audit-pathway, workload-SLO, and
-cluster-scaling smokes gated on their diagnostics findings, a timeline
+plus the serving-throughput, audit-pathway, workload-SLO,
+cluster-scaling, and KV-tiering smokes gated on their diagnostics
+findings, a timeline
 determinism check (same seed + trace must render a byte-identical
 ``/timeline`` Chrome-trace body, mirroring the ``/metrics``
 byte-identity gate), a ledger integrity audit (orphan ``BENCH_*.json``
@@ -44,7 +45,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: ``Ledger.audit_owned`` flags anything else as an orphan (a baseline
 #: nobody maintains silently attests metrics nothing measures).
 BENCHES = ["serve_throughput", "audit_pathways", "serve_workloads",
-           "serve_cluster"]
+           "serve_cluster", "serve_tiering"]
 
 #: In-process checks that also own ledger keys (no benchmarks/ script):
 #: the timeline determinism gate below ledgers its deterministic
@@ -239,6 +240,9 @@ def main() -> int:
     cluster_rec = run_bench("serve_cluster.py", ledger_flags)
     diag.extend(cluster_rec["findings"], source="serve_cluster")
 
+    tiering_rec = run_bench("serve_tiering.py", ledger_flags)
+    diag.extend(tiering_rec["findings"], source="serve_tiering")
+
     timeline_rec = timeline_smoke(args.ledger_dir, args.update_baseline)
     diag.extend(timeline_rec["findings"], source="serve_timeline")
 
@@ -247,6 +251,7 @@ def main() -> int:
         "audit_pathways": audit_rec.get("ledger"),
         "serve_workloads": workloads_rec.get("ledger"),
         "serve_cluster": cluster_rec.get("ledger"),
+        "serve_tiering": tiering_rec.get("ledger"),
         "serve_timeline": timeline_rec.get("ledger"),
     }
 
@@ -303,6 +308,12 @@ def main() -> int:
             "routed_affinity": cluster_rec["routed_affinity"],
             "shared_hit_rate": cluster_rec["shared_hit_rate"],
             "replica_sweep": cluster_rec["replica_sweep"]},
+        "serve_tiering": {
+            "oracle_ok": tiering_rec["oracle_ok"],
+            "exact_vs_reference": tiering_rec["exact_vs_reference"],
+            "swap_restore_rate": tiering_rec["swap"]["swap_restore_rate"],
+            "recompute_tokens_saved": tiering_rec["recompute_tokens_saved"],
+            "preemptions": tiering_rec["swap"]["preemptions"]},
         "serve_timeline": {
             k: timeline_rec[k] for k in
             ("deterministic", "valid_chrome_trace", "share_sum_exact",
@@ -346,6 +357,11 @@ def main() -> int:
               f"affinity={cluster_rec['routed_affinity']} "
               f"shared_hit={cluster_rec['shared_hit_rate']} "
               f"oracle_ok={cluster_rec['oracle_ok']}")
+        print(f"OK serve_tiering           "
+              f"restore_rate={tiering_rec['swap']['swap_restore_rate']} "
+              f"saved={tiering_rec['recompute_tokens_saved']} "
+              f"exact={tiering_rec['exact_vs_reference']} "
+              f"oracle_ok={tiering_rec['oracle_ok']}")
         print(f"OK serve_timeline          "
               f"deterministic={timeline_rec['deterministic']} "
               f"valid={timeline_rec['valid_chrome_trace']} "

@@ -207,6 +207,17 @@ class ExpectedSignature:
     max_queue_share_p99: float | None = None
     max_prefill_share_p99: float | None = None
     max_preempted_share: float | None = None
+    # KV memory tiering (paged engine reports): floor on the fraction of
+    # previously-computed rows that readmissions restored from the host
+    # swap tier instead of re-prefilling, and a ceiling on the re-
+    # prefilled rows themselves.  A disabled/broken swap tier is another
+    # token-invisible degradation — streams stay bit-identical while
+    # every preemption's work is recomputed.  Violations are
+    # ``pathway-tiering`` findings.  The floor is judged only when the
+    # run actually readmitted previously-computed work (restored +
+    # recompute > 0); an uncontended run is vacuously healthy.
+    min_swap_restore_rate: float | None = None
+    max_recompute_tokens: int | None = None
     allowed_collectives: frozenset[str] | None = None
     max_collective_group: int | None = None  # default: ctx.n_devices
     forbid_host_transfer: bool = False
@@ -447,6 +458,28 @@ def _check_rule(rule: Rule, ctx: AuditContext, ev: Evidence) -> list[dict]:
                 f"{sig.min_shared_hit_rate:.3f} on a shared-prefix "
                 f"workload: misrouting scatters prefix-sharing requests "
                 f"across replicas, recomputing pages a sibling holds"))
+
+    if sig.min_swap_restore_rate is not None:
+        srr = rep.get("swap_restore_rate")
+        readmitted = (rep.get("restored_tokens", 0)
+                      + rep.get("recompute_tokens", 0))
+        if srr is not None and readmitted > 0 and srr < sig.min_swap_restore_rate:
+            out.append(_find(
+                rule, "pathway-tiering",
+                f"readmissions restored only {srr:.0%} of "
+                f"{readmitted} previously-computed KV rows from the host "
+                f"swap tier (< {sig.min_swap_restore_rate:.0%}): preempted "
+                f"work is re-prefilled instead of swapped back in (token "
+                f"streams stay identical; the memory pathway degraded)"))
+    if sig.max_recompute_tokens is not None:
+        rt = rep.get("recompute_tokens")
+        if rt is not None and rt > sig.max_recompute_tokens:
+            out.append(_find(
+                rule, "pathway-tiering",
+                f"{rt} previously-computed KV rows re-prefilled on "
+                f"readmission (> {sig.max_recompute_tokens}): the host "
+                f"swap tier is absorbing less preempted work than this "
+                f"trace's healthy baseline"))
 
     if sig.max_compiles_per_fn is not None:
         for fn, n in ev.compile_counts().items():

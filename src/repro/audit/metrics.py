@@ -384,6 +384,17 @@ class ServeMetrics:
             "serve_routed_spill_total",
             "router placements spilled off a saturated affine replica",
             labels=lb)
+        self.swap_out_pages = r.counter(
+            "serve_swap_out_pages_total",
+            "KV pages parked on the host swap tier (preempt + prefix "
+            "spill)", labels=lb)
+        self.swap_in_pages = r.counter(
+            "serve_swap_in_pages_total",
+            "KV pages restored from the host swap tier (readmit + prefix "
+            "page-in)", labels=lb)
+        self.host_pages = r.gauge(
+            "serve_host_pages_in_use", "host swap tier pages resident",
+            labels=lb)
         self.active_lanes = r.gauge(
             "serve_active_lanes", "lanes active in the latest step", labels=lb)
         self.pages_total = r.gauge(
@@ -450,6 +461,14 @@ class ServeMetrics:
             self._observe_pages(d)
         elif ev.kind == "preempt":
             self.preemptions.inc()
+            self._observe_pages(d)
+        elif ev.kind == "swap-out":
+            self.swap_out_pages.inc(d.get("pages", 0))
+            self.host_pages.set(d.get("host_pages_in_use", 0))
+            self._observe_pages(d)
+        elif ev.kind == "swap-in":
+            self.swap_in_pages.inc(d.get("pages", 0))
+            self.host_pages.set(d.get("host_pages_in_use", 0))
             self._observe_pages(d)
         elif ev.kind == "compile":
             self.recompiles.inc()

@@ -36,6 +36,9 @@ KNOWN_KINDS = frozenset({
     # serve.engine — request lifecycle + hot loop (both engines)
     "engine-init", "submit", "admit", "prefill-done", "first-token", "step",
     "preempt", "finish", "cancel", "compile",
+    # serve.engine — KV memory tiering (device pool <-> host swap tier):
+    # preempt/readmit page parking and cold-prefix spill/page-in
+    "swap-out", "swap-in",
     # serve.scheduler — planning decisions
     "sched-admit", "sched-readmit", "sched-preempt", "sched-done",
     "sched-cancel",

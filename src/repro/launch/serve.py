@@ -61,7 +61,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
           engine: str = "paged", block_size: int = 8,
           chunk: int = 4, shared_prefix: int = 0,
           use_prefix_cache: bool = True, kernel: str = "paged",
-          replicas: int = 1, routing: str = "affinity",
+          swap: bool = True, replicas: int = 1, routing: str = "affinity",
           audit: bool = True, metrics_port: int | None = None,
           metrics_linger: float = 0.0, trace_out: str | None = None,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
@@ -126,7 +126,7 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
         eng = PagedServeEngine(model, params, slots=slots, max_len=max_len,
                                block_size=block_size, chunk=chunk,
                                use_prefix_cache=use_prefix_cache,
-                               kernel=kernel, tracer=tracer)
+                               kernel=kernel, swap=swap, tracer=tracer)
     else:
         eng = ServeEngine(model, params, slots=slots, max_len=max_len,
                           tracer=tracer)
@@ -168,7 +168,9 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
     elif engine == "paged":
         out.update({k: rep[k] for k in
                     ("prefill_tokens", "cached_tokens", "prefix_hit_rate",
-                     "page_peak_utilization", "preemptions", "kernel")})
+                     "page_peak_utilization", "preemptions", "kernel",
+                     "swap", "swap_restore_rate",
+                     "restored_tokens", "recompute_tokens")})
     if run_audit is not None:
         lat = Evidence(tracer=run_audit.tracer).request_latencies()
         if lat:
@@ -240,6 +242,12 @@ def main() -> None:
                          "dense working-cache gather — the latter exists "
                          "so operators can watch the pathway-kernel "
                          "detector fire")
+    ap.add_argument("--swap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="host KV swap tier for preempted requests "
+                         "(--no-swap recomputes on readmission instead — "
+                         "token streams do not change; the pathway-tiering "
+                         "detector exists to catch exactly that)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="> 1 serves through a ClusterEngine: N paged "
                          "replicas behind prefix-affinity routing, one "
@@ -274,6 +282,7 @@ def main() -> None:
                 block_size=args.block_size, chunk=args.chunk,
                 shared_prefix=args.shared_prefix,
                 use_prefix_cache=args.use_prefix_cache, kernel=args.kernel,
+                swap=args.swap,
                 replicas=args.replicas, routing=args.routing,
                 audit=args.audit, metrics_port=args.metrics_port,
                 metrics_linger=args.metrics_linger,

@@ -6,9 +6,11 @@ request-lifecycle API.
   ``RequestHandle`` (streaming, ``result()``, ``cancel()``), the
   ``Engine`` protocol (``submit / step / drain / cancel / report``) and
   the ``run_requests`` compatibility shim.
-- ``paging``: BlockAllocator / PrefixCache / KVPool / DevicePageView
-  (page-level memory; the device view is the page pool + per-slot page
-  tables the Pallas paged-attention kernel consumes directly).
+- ``paging``: BlockAllocator / PrefixCache / KVPool / DevicePageView /
+  HostSwapPool (page-level memory; the device view is the page pool +
+  per-slot page tables the Pallas paged-attention kernel consumes
+  directly, and the host swap pool is the tier below it — preempted
+  requests and cold prefix pages park there instead of being dropped).
 - ``scheduler``: FCFS + priority admission with preemption-on-OOM.
 - ``engine``: ServeEngine (contiguous oracle) and PagedServeEngine
   (prefix caching + chunked prefill), tied together by
@@ -30,19 +32,21 @@ from repro.serve.cluster import (AffinityPolicy, BloomSummary, ClusterEngine,
 from repro.serve.engine import (PagedServeEngine, Request, ServeEngine,
                                 compare_engines, token_matrix)
 from repro.serve.paging import (BlockAllocator, BlockAllocatorError,
-                                DevicePageView, KVPool, PrefixCache,
-                                chain_hashes, pages_for)
-from repro.serve.scheduler import Plan, SchedEntry, Scheduler
+                                DevicePageView, HostSwapPool, KVPool,
+                                PrefixCache, SwapStats, chain_hashes,
+                                pages_for)
+from repro.serve.scheduler import Plan, SchedEntry, Scheduler, SwapCostModel
 from repro.serve.workloads import (WorkloadSpec, WorkloadTrace, generate,
                                    smoke_specs)
 
 __all__ = [
     "AffinityPolicy", "BlockAllocator", "BlockAllocatorError",
     "BloomSummary", "ClusterEngine", "DevicePageView", "Engine",
-    "ExactSummary", "GREEDY", "KVPool", "LaneState", "PrefixCache",
-    "PagedServeEngine", "Plan", "RandomPolicy", "Request", "RequestHandle",
-    "RoundRobinPolicy", "SamplingParams", "SchedEntry", "Scheduler",
-    "ServeEngine", "WorkloadSpec", "WorkloadTrace", "chain_hashes",
-    "compare_engines", "generate", "make_policy", "match_depth",
-    "pages_for", "run_requests", "smoke_specs", "token_matrix",
+    "ExactSummary", "GREEDY", "HostSwapPool", "KVPool", "LaneState",
+    "PrefixCache", "PagedServeEngine", "Plan", "RandomPolicy", "Request",
+    "RequestHandle", "RoundRobinPolicy", "SamplingParams", "SchedEntry",
+    "Scheduler", "ServeEngine", "SwapCostModel", "SwapStats",
+    "WorkloadSpec", "WorkloadTrace", "chain_hashes", "compare_engines",
+    "generate", "make_policy", "match_depth", "pages_for", "run_requests",
+    "smoke_specs", "token_matrix",
 ]

@@ -18,7 +18,10 @@ based per-request PRNG keys make sampled streams engine-independent).
 pages instead of recomputing them, chunked prefill so a long prompt
 consumes C tokens per step in the same batched call that advances
 decoding lanes by one, and a priority scheduler (serve.scheduler) with
-preemption-on-OOM and recompute-on-readmit.  Its default KV pathway
+preemption-on-OOM.  Preempted work parks its written KV pages on a host
+swap tier (serve.paging.HostSwapPool) and readmission swaps them back in
+— recompute-on-readmit survives as the costed fallback (and the audited
+``swap=False`` misconfiguration).  Its default KV pathway
 (``kernel="paged"``) keeps the cache *in the page pool on device* and
 attends it through the per-slot page table (``decode_paged_chunk`` →
 ``kernels.paged_attention``); the dense per-slot working cache survives
@@ -32,6 +35,7 @@ no shape polymorphism, no recompiles, no host-side logits traffic.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -44,10 +48,15 @@ from repro.models.decode import CompileWatcher
 from repro.models.model import Model
 from repro.serve.api import (GREEDY, LaneState, RequestHandle, SamplingParams,
                              run_requests)
-from repro.serve.paging import (BlockAllocator, DevicePageView, KVPool,
-                                PrefixCache, chain_hashes, pages_for)
+from repro.serve.paging import (BlockAllocator, DevicePageView, HostSwapPool,
+                                KVPool, PrefixCache, chain_hashes, pages_for)
 from repro.serve.scheduler import (DONE, PREEMPTED, RUNNING, WAITING, Plan,
-                                   SchedEntry, Scheduler)
+                                   SchedEntry, Scheduler, SwapCostModel)
+
+# quantile feeds (ttft_ticks) keep at most this many samples: a bounded
+# ring, not an unbounded per-request append, so a long-lived serving
+# process holds steady-state memory
+LATENCY_RING = 4096
 
 
 @dataclass
@@ -76,8 +85,52 @@ def _validate(req: Request) -> None:
         raise ValueError(f"request id {req.rid} does not fit int32")
 
 
+def _validate_fit(req: Request, max_len: int) -> None:
+    """Reject a generation budget the slot geometry cannot hold.  Both
+    engines clamp the prompt to ``prompt[-(max_len - max_new):]``; with
+    ``max_new >= max_len`` that slice silently degenerates (``[-0:]``
+    keeps the whole prompt, larger budgets truncate the wrong end) and
+    the request only dies later, deep in page-table binding."""
+    if req.max_new < 1:
+        raise ValueError(
+            f"request {req.rid}: max_new={req.max_new} must be >= 1")
+    if req.max_new >= max_len:
+        raise ValueError(
+            f"request {req.rid}: max_new={req.max_new} must be < "
+            f"max_len={max_len} (the prompt is clamped to max_len - "
+            f"max_new tokens of context; no context would remain)")
+
+
 def _samples(req: Request) -> bool:
     return not (req.sampling or GREEDY).greedy
+
+
+# Fixed-shape page movers for the swap tier.  The page/slot index is a
+# *traced* argument, so each helper compiles exactly once per pool shape;
+# eager ``.at[idx].set`` would bake the index (and the page count) into
+# the program and pay a fresh XLA compile on nearly every swap.
+@jax.jit
+def _read_page(pool, bid):
+    """One page ``(layers, block_size, kv, hd)`` out of the device pool."""
+    return jax.lax.dynamic_slice_in_dim(pool, bid, 1, axis=1)[:, 0]
+
+
+@jax.jit
+def _write_page(pool, bid, page):
+    return jax.lax.dynamic_update_slice_in_dim(pool, page[:, None], bid,
+                                               axis=1)
+
+
+@jax.jit
+def _read_slot(cache, slot):
+    """One slot's dense rows ``(layers, max_len, kv, hd)`` (gather mode)."""
+    return jax.lax.dynamic_slice_in_dim(cache, slot, 1, axis=1)[:, 0]
+
+
+@jax.jit
+def _write_slot(cache, slot, slab):
+    return jax.lax.dynamic_update_slice_in_dim(cache, slab[:, None], slot,
+                                               axis=1)
 
 
 @dataclass
@@ -86,11 +139,21 @@ class EngineStats:
     cancelled: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
-    batch_occupancy: list[int] = field(default_factory=list)
+    # bounded occupancy accumulator (running sum + tick count) instead of
+    # an unbounded per-tick list: the mean is exact (integer sum / count,
+    # same value np.mean produced) and memory is O(1) for long-lived
+    # serving processes
+    occupancy_sum: int = 0
+    occupancy_ticks: int = 0
+
+    def observe_occupancy(self, lanes: int) -> None:
+        self.occupancy_sum += lanes
+        self.occupancy_ticks += 1
 
     @property
     def mean_occupancy(self) -> float:
-        return float(np.mean(self.batch_occupancy)) if self.batch_occupancy else 0.0
+        return (self.occupancy_sum / self.occupancy_ticks
+                if self.occupancy_ticks else 0.0)
 
 
 class ServeEngine:
@@ -133,6 +196,7 @@ class ServeEngine:
     def submit(self, req: Request, *, arrival: float | None = None
                ) -> RequestHandle:
         _validate(req)
+        _validate_fit(req, self.max_len)
         arrival = self.now if arrival is None else arrival
         req.t_submit = req.t_submit or time.perf_counter()
         self.pending.append((arrival, req))
@@ -240,7 +304,7 @@ class ServeEngine:
                 self.params, self.cache,
                 jnp.asarray(self._last_token), jnp.asarray(self.pos))
         self.stats.decode_steps += 1
-        self.stats.batch_occupancy.append(len(self.active))
+        self.stats.observe_occupancy(len(self.active))
         self.trace.emit("step", step_kind="decode", lanes=len(self.active))
         nxt = np.asarray(toks)
 
@@ -344,11 +408,34 @@ class PagedStats:
     prefill_tokens: int = 0      # prompt tokens actually computed
     cached_tokens: int = 0       # prompt tokens served from the prefix cache
     admit_retries: int = 0       # admissions bounced by an intra-tick race
+    # host swap tier accounting: every readmission of previously-computed
+    # rows either restores them from the tier (swap-in) or re-prefills
+    # them (recompute) — the restore rate is the tiering pathway's health
+    # signal the audit layer gates on
+    restored_tokens: int = 0     # KV rows swapped back in on readmission
+    recompute_tokens: int = 0    # previously-computed rows re-prefilled
+    swap_outs: int = 0           # preemptions that parked pages on host
+    swap_ins: int = 0            # readmissions served from the host tier
 
     @property
     def prefix_hit_rate(self) -> float:
         total = self.prefill_tokens + self.cached_tokens
         return self.cached_tokens / total if total else 0.0
+
+    @property
+    def swap_restore_rate(self) -> float:
+        total = self.restored_tokens + self.recompute_tokens
+        return self.restored_tokens / total if total else 0.0
+
+
+@dataclass
+class _SwapRecord:
+    """A preempted request's host-parked state: the KV rows it had
+    written, page-granular, plus how many rows they cover.  ``host_ids``
+    is empty when the tier was full or swap is disabled — the record
+    still rides along so recompute on readmission is attributed."""
+    consumed: int
+    host_ids: list[int] = field(default_factory=list)
 
 
 @dataclass
@@ -410,7 +497,9 @@ class PagedServeEngine:
                  num_blocks: int | None = None, chunk: int = 8,
                  tick_dt: float = 1.0, use_prefix_cache: bool = True,
                  admit_every: int = 1, kernel: str = "paged",
-                 preemption: bool = True,
+                 preemption: bool = True, swap: bool = True,
+                 host_blocks: int | None = None,
+                 swap_cost: SwapCostModel | None = None,
                  tracer: Tracer | None = None):
         if model.cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -433,6 +522,17 @@ class PagedServeEngine:
         self.alloc = BlockAllocator(num_blocks, block_size)
         self.prefix = PrefixCache(self.alloc)
         self.prefix_enabled = use_prefix_cache
+        # host swap tier: preempted requests park written pages here and
+        # readmission swaps them back in instead of re-prefilling; cold
+        # prefix pages evicted under pressure spill to the same tier.
+        # swap=False models the misconfigured deployment (device-only
+        # residency, always-recompute) the tiering audit exists to catch.
+        self.swap_enabled = swap
+        if host_blocks is None:
+            host_blocks = 2 * num_blocks
+        self.host = HostSwapPool(host_blocks, block_size)
+        self.swap_cost = swap_cost or SwapCostModel()
+        self._swap_records: dict[int, _SwapRecord] = {}   # entry.seq -> rec
         if kernel == "paged":
             # KV storage IS the device page pool; no host KVPool, no
             # per-slot working cache, no admission gather.  Geometry
@@ -454,6 +554,13 @@ class PagedServeEngine:
                                k.dtype)
             self.view = None
             self.cache = model.zero_cache(slots, max_len)
+        if swap and use_prefix_cache and kernel == "paged":
+            # cold-prefix spill rides the same host tier (kernel mode
+            # only: gather-mode registered pages already live in the host
+            # KVPool, spilling them would copy host to host)
+            self.prefix.attach_spill(
+                spill_out=self._spill_page, page_in=self._page_in,
+                drop=self.host.decref, capacity=host_blocks)
         self.now = 0.0
         self.tick_dt = tick_dt
         self.admit_every = admit_every
@@ -470,7 +577,8 @@ class PagedServeEngine:
         self.active: dict[int, _Slot] = {}
         self.stats = EngineStats()
         self.pstats = PagedStats()
-        self.ttft_ticks: list[float] = []   # first-token latency, tick clock
+        # first-token latency, tick clock — bounded ring (quantile feed)
+        self.ttft_ticks: deque[float] = deque(maxlen=LATENCY_RING)
         def _on_compile(fn, reason, sig):
             self.trace.emit("compile", fn=fn, reason=reason, signature=sig)
 
@@ -489,7 +597,8 @@ class PagedServeEngine:
                         chunk=chunk, pages=num_blocks,
                         prefix_cache=use_prefix_cache,
                         admit_every=admit_every, kernel=kernel,
-                        preemption=preemption)
+                        preemption=preemption, swap=swap,
+                        host_pages=host_blocks)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request, *, arrival: float | None = None
@@ -498,6 +607,7 @@ class PagedServeEngine:
         # request fails — once queued, it would starve everything behind
         # it (strict head-of-line) without ever becoming admissible
         _validate(req)
+        _validate_fit(req, self.max_len)
         worst = pages_for(len(self._feed_of(req)) + req.max_new,
                           self.alloc.block_size)
         if worst > self.alloc.num_blocks:
@@ -524,21 +634,89 @@ class PagedServeEngine:
         return list(prompt) + list(req.out)
 
     def _cost(self, entry: SchedEntry) -> int:
-        """Net new pages if admitted now (prefix hits are shared, free)."""
+        """Net new pages if admitted now (prefix hits are shared, free).
+
+        A preempted entry whose readmission the ``SwapCostModel`` prices
+        cheaper as a swap-in costs its *full* page count — every page
+        comes back as a private page, no prefix sharing — which keeps the
+        scheduler's feasibility arithmetic exact for both pathways."""
         req = entry.req
         feed = self._feed_of(req)
         total = pages_for(len(feed) + req.max_new - len(req.out),
                           self.alloc.block_size)
+        if self._restorable(entry) is not None:
+            return total
         matched = (self.prefix.peek(feed, max_tokens=len(feed) - 1)
                    if self.prefix_enabled else 0)
         return total - matched // self.alloc.block_size
 
+    # --------------------------------------------------------- host tier
+    def _restorable(self, entry: SchedEntry) -> _SwapRecord | None:
+        """The entry's swap record, iff restoring it beats recomputing."""
+        rec = self._swap_records.get(entry.seq)
+        if (rec is not None and rec.host_ids
+                and self.swap_cost.prefer_swap(len(rec.host_ids),
+                                               rec.consumed)):
+            return rec
+        return None
+
+    def _spill_page(self, bid: int) -> int | None:
+        """PrefixCache spill hook: copy one device page's rows to the
+        host tier (kernel mode; returns None when the tier is full)."""
+        hid = self.host.put(np.asarray(_read_page(self.view.k, bid)),
+                            np.asarray(_read_page(self.view.v, bid)))
+        if hid is not None:
+            self.trace.emit("swap-out", rid=None, tick=self.now,
+                            reason="prefix-spill", pages=1,
+                            tokens=self.alloc.block_size,
+                            pages_in_use=self.alloc.in_use,
+                            host_pages_in_use=self.host.in_use)
+        return hid
+
+    def _page_in(self, hid: int) -> int | None:
+        """PrefixCache restore hook: allocate a device page and copy a
+        spilled page's rows back (None when the device pool is empty —
+        the match stops at the resident prefix)."""
+        if self.alloc.num_free == 0:
+            return None
+        bid = self.alloc.alloc()
+        k_rows, v_rows = self.host.get(hid)
+        self.view.k = _write_page(self.view.k, bid, jnp.asarray(k_rows))
+        self.view.v = _write_page(self.view.v, bid, jnp.asarray(v_rows))
+        self.cache = self.view.cache()   # rebind: the writes made new arrays
+        self.trace.emit("swap-in", rid=None, tick=self.now,
+                        reason="prefix-restore", pages=1,
+                        tokens=self.alloc.block_size,
+                        pages_in_use=self.alloc.in_use,
+                        host_pages_in_use=self.host.in_use)
+        return bid
+
+    def _drop_swap(self, entry: SchedEntry, *, swapped_in: bool = False
+                   ) -> _SwapRecord | None:
+        """Release an entry's host-parked pages (readmit or cancel)."""
+        rec = self._swap_records.pop(entry.seq, None)
+        if rec is not None:
+            for hid in rec.host_ids:
+                self.host.decref(hid, swapped_in=swapped_in)
+        return rec
+
     # ------------------------------------------------------------- admit
-    def _admit(self, entry: SchedEntry, slot: int) -> bool:
+    def _admit(self, entry: SchedEntry,
+               victims: tuple[SchedEntry, ...] = ()) -> bool:
+        """Place one candidate, preempting its planned ``victims`` only
+        once admission is guaranteed.  The budget check happens *after*
+        the prefix match — matched pages the plan counted as evictable
+        are pinned by the match's references, so measuring free +
+        evictable at that point (plus the pages each victim will release)
+        is exact: a candidate that fails here fails before any running
+        work is flushed."""
         req: Request = entry.req
         bs = self.alloc.block_size
         feed = self._feed_of(req)
         total = pages_for(len(feed) + req.max_new - len(req.out), bs)
+        rec = self._restorable(entry)
+        if rec is not None:
+            return self._admit_restore(entry, feed, total, rec, victims)
         # leave ≥1 token to feed so the last-position logits exist
         if self.prefix_enabled:
             matched_len, shared = self.prefix.match(feed,
@@ -546,14 +724,24 @@ class PagedServeEngine:
         else:
             matched_len, shared = 0, []
         need = total - len(shared)
-        if need > self.alloc.num_free:
-            self.prefix.evict(need - self.alloc.num_free)
-        if need > self.alloc.num_free:
+        budget = (self.alloc.num_free + self.prefix.evictable()
+                  + sum(v.held_pages for v in victims))
+        if need > budget:
             for bid in shared:      # lost an intra-tick race; stay waiting
                 self.alloc.decref(bid)
             self.pstats.admit_retries += 1
             return False
+        for v in victims:           # guaranteed to buy the admission now
+            self._preempt(v)
+        if need > self.alloc.num_free:
+            self.prefix.evict(need - self.alloc.num_free)
+        if need > self.alloc.num_free:  # pragma: no cover - budget-guarded
+            for bid in shared:
+                self.alloc.decref(bid)
+            self.pstats.admit_retries += 1
+            return False
         private = [self.alloc.alloc() for _ in range(need)]
+        slot = self._free_slots()[0]
 
         if self.kernel == "paged":
             # zero-copy prefix reuse: the matched pages (and the fresh
@@ -580,12 +768,97 @@ class PagedServeEngine:
             shared=shared, private=private, registered=matched_len // bs,
             table=table)
         self.sched.mark_running(entry, slot, len(private))
+        dropped = self._drop_swap(entry)
+        if dropped is not None:
+            # a readmission the cost model (or a full/disabled tier) sent
+            # down the recompute path: previously-computed rows beyond the
+            # prefix hit are re-prefilled
+            self.pstats.recompute_tokens += max(0,
+                                                dropped.consumed - matched_len)
         # pages_in_use rides every occupancy-changing event so the live
         # metrics layer can histogram pool pressure straight off the
         # trace (deterministic: the allocator count is schedule state)
         self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
                         feed_tokens=len(feed), cached_tokens=matched_len,
                         new_pages=len(private), shared_pages=len(shared),
+                        pages_in_use=self.alloc.in_use)
+        return True
+
+    def _admit_restore(self, entry: SchedEntry, feed: list[int],
+                       total: int, rec: _SwapRecord,
+                       victims: tuple[SchedEntry, ...] = ()) -> bool:
+        """Swap-in readmission: every page comes back as a private page
+        (no prefix match — the host copy is already exact), the parked
+        rows are copied into the fresh pages, and the slot resumes at the
+        preempted position.  Token-exact with the recompute pathway: the
+        restored rows ARE the rows an uninterrupted run had written, and
+        ``pending = feed[consumed:]`` resumes the same chunk arithmetic."""
+        req: Request = entry.req
+        bs = self.alloc.block_size
+        need = total
+        budget = (self.alloc.num_free + self.prefix.evictable()
+                  + sum(v.held_pages for v in victims))
+        if need > budget:
+            # intra-tick race: stay waiting, the record stays parked
+            self.pstats.admit_retries += 1
+            return False
+        for v in victims:
+            self._preempt(v)
+        if need > self.alloc.num_free:
+            self.prefix.evict(need - self.alloc.num_free)
+        if need > self.alloc.num_free:  # pragma: no cover - budget-guarded
+            self.pstats.admit_retries += 1
+            return False
+        private = [self.alloc.alloc() for _ in range(need)]
+        slot = self._free_slots()[0]
+        n_pages = len(rec.host_ids)
+        if self.kernel == "paged":
+            k, v = self.view.k, self.view.v
+            for bid, hid in zip(private, rec.host_ids):
+                k_rows, v_rows = self.host.get(hid)
+                k = _write_page(k, bid, jnp.asarray(k_rows))
+                v = _write_page(v, bid, jnp.asarray(v_rows))
+            self.view.k, self.view.v = k, v
+            self.cache = self.view.cache()   # rebind the fresh arrays
+            table = list(private)
+            self.view.bind_slot(slot, table)
+        else:
+            table = []
+            rows = min(n_pages * bs, self.max_len)
+            kc, vc = self.cache["self"]["k"], self.cache["self"]["v"]
+            # full-slab write keeps the shape fixed; rows >= consumed are
+            # never read before the decode loop rewrites them, so zeros
+            # beyond the restored rows are as good as the stale occupant
+            k_slab = np.zeros((kc.shape[0],) + tuple(kc.shape[2:]),
+                              dtype=kc.dtype)
+            v_slab = np.zeros_like(k_slab)
+            k_slab[:, :rows] = np.concatenate(
+                [self.host.get(h)[0] for h in rec.host_ids],
+                axis=1)[:, :rows]
+            v_slab[:, :rows] = np.concatenate(
+                [self.host.get(h)[1] for h in rec.host_ids],
+                axis=1)[:, :rows]
+            self.cache["self"]["k"] = _write_slot(kc, slot,
+                                                  jnp.asarray(k_slab))
+            self.cache["self"]["v"] = _write_slot(vc, slot,
+                                                  jnp.asarray(v_slab))
+        self.active[slot] = _Slot(
+            entry=entry, req=req, feed=feed,
+            hashes=chain_hashes(feed, bs),
+            pending=feed[rec.consumed:], consumed=rec.consumed,
+            shared=[], private=private, registered=0, table=table)
+        self.sched.mark_running(entry, slot, len(private))
+        self._drop_swap(entry, swapped_in=True)
+        self.pstats.restored_tokens += rec.consumed
+        self.pstats.swap_ins += 1
+        self.trace.emit("swap-in", rid=req.rid, slot=slot, tick=self.now,
+                        reason="readmit", pages=n_pages,
+                        tokens=rec.consumed,
+                        pages_in_use=self.alloc.in_use,
+                        host_pages_in_use=self.host.in_use)
+        self.trace.emit("admit", rid=req.rid, slot=slot, tick=self.now,
+                        feed_tokens=len(feed), cached_tokens=0,
+                        new_pages=len(private), shared_pages=0,
                         pages_in_use=self.alloc.in_use)
         return True
 
@@ -626,9 +899,55 @@ class PagedServeEngine:
         for bid in st.private:
             self.alloc.decref(bid)   # registered pages survive via cache ref
 
+    def _swap_out(self, st: _Slot, slot: int) -> int:
+        """Park the victim's written pages on the host tier.  Returns the
+        page count parked (0: swap disabled, nothing written, or tier
+        full — the record still rides along so the readmission's
+        recompute is attributed).  Shared prefix pages are copied too:
+        the record must survive the prefix cache evicting them."""
+        rec = _SwapRecord(consumed=st.consumed)
+        self._swap_records[st.entry.seq] = rec
+        if not self.swap_enabled or st.consumed <= 0:
+            return 0
+        bs = self.alloc.block_size
+        n_pages = pages_for(st.consumed, bs)
+        if self.kernel == "paged":
+            k_pages = np.stack([np.asarray(_read_page(self.view.k, b))
+                                for b in st.table[:n_pages]], axis=1)
+            v_pages = np.stack([np.asarray(_read_page(self.view.v, b))
+                                for b in st.table[:n_pages]], axis=1)
+        else:
+            rows = min(n_pages * bs, self.max_len)
+            pad = ((0, 0), (0, n_pages * bs - rows), (0, 0), (0, 0))
+            k_rows = np.pad(np.asarray(
+                _read_slot(self.cache["self"]["k"], slot))[:, :rows], pad)
+            v_rows = np.pad(np.asarray(
+                _read_slot(self.cache["self"]["v"], slot))[:, :rows], pad)
+            k_pages = k_rows.reshape(
+                k_rows.shape[0], n_pages, bs, *k_rows.shape[2:])
+            v_pages = v_rows.reshape(
+                v_rows.shape[0], n_pages, bs, *v_rows.shape[2:])
+        ids: list[int] = []
+        for i in range(n_pages):
+            hid = self.host.put(k_pages[:, i], v_pages[:, i])
+            if hid is None:             # tier full: recompute on readmit
+                for h in ids:
+                    self.host.decref(h)
+                return 0
+            ids.append(hid)
+        rec.host_ids = ids
+        self.pstats.swap_outs += 1
+        self.trace.emit("swap-out", rid=st.req.rid, slot=slot,
+                        tick=self.now, reason="preempt", pages=n_pages,
+                        tokens=st.consumed,
+                        pages_in_use=self.alloc.in_use,
+                        host_pages_in_use=self.host.in_use)
+        return n_pages
+
     def _preempt(self, entry: SchedEntry) -> None:
         st = self.active.pop(entry.slot)
         self.lane.clear(entry.slot)
+        self._swap_out(st, entry.slot)
         if self.view is not None:
             self.view.clear_slot(entry.slot)
         self._release(st)
@@ -672,7 +991,14 @@ class PagedServeEngine:
             released = len(st.shared) + len(st.private)
             self._release(st)
             self.sched.mark_cancelled(entry)
-        elif entry.state in (WAITING, PREEMPTED):
+        elif entry.state == PREEMPTED:
+            # mid-lifecycle, not unstarted: the request had consumed
+            # tokens before losing its slot, and may hold host-parked
+            # pages that must be released with it
+            phase, released = "preempted", 0
+            self._drop_swap(entry)
+            self.sched.mark_cancelled(entry)
+        elif entry.state == WAITING:
             phase, released = "waiting", 0
             self.sched.mark_cancelled(entry)
         else:
@@ -698,13 +1024,18 @@ class PagedServeEngine:
                 free_slots=len(self._free_slots()),
                 free_pages=self.alloc.num_free + self.prefix.evictable(),
                 cost_fn=self._cost)
-            for victim in plan.preempt:
-                self._preempt(victim)
+            # a candidate's victims are preempted only once its own
+            # admission is guaranteed: _admit re-prices the candidate
+            # against the pool as it stands NOW (earlier admissions this
+            # tick consume free and evictable pages the plan's
+            # bookkeeping could not see) and commits the preemptions only
+            # after its exact budget check passes, so a failed admission
+            # never flushes running work for nothing
             for entry in plan.admit:
-                free = self._free_slots()
-                if not free:
+                victims = tuple(plan.victims.get(entry.seq, ()))
+                if not self._free_slots() and not victims:
                     break
-                if not self._admit(entry, free[0]):
+                if not self._admit(entry, victims):
                     break   # intra-tick race: keep strict head-of-line order
                 admitted += 1
         else:
@@ -757,7 +1088,7 @@ class PagedServeEngine:
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(pos), jnp.asarray(n_new))
         self.stats.decode_steps += 1
-        self.stats.batch_occupancy.append(len(self.active))
+        self.stats.observe_occupancy(len(self.active))
         if self.trace.enabled:       # keep the untraced tick allocation-free
             # lane kind comes from pending state, not chunk size: a
             # 1-token final prefill chunk is still a prefill lane
@@ -844,6 +1175,20 @@ class PagedServeEngine:
             "kernel": self.kernel,
             "preemption": self.sched.preemption,
             "preemptions": self.sched.stats.preemptions,
+            # host swap tier: the tiering pathway's health signals (the
+            # audit layer's pathway-tiering expectations read these)
+            "swap": self.swap_enabled,
+            "swap_outs": self.pstats.swap_outs,
+            "swap_ins": self.pstats.swap_ins,
+            "restored_tokens": self.pstats.restored_tokens,
+            "recompute_tokens": self.pstats.recompute_tokens,
+            "recompute_tokens_saved": self.pstats.restored_tokens,
+            "swap_restore_rate": round(self.pstats.swap_restore_rate, 3),
+            "prefix_spills": self.prefix.stats.spills,
+            "prefix_restores": self.prefix.stats.restores,
+            "host_pages": self.host.capacity,
+            "host_pages_in_use": self.host.in_use,
+            "host_page_peak": self.host.stats.peak_in_use,
             # worst per-program count (greedy / sampled variants each
             # bound at one compile; see ServeEngine.report)
             "compiles": max(self._chunk_fn.compiles,

@@ -22,9 +22,15 @@ framework's fixed-shape decode path:
   Pallas paged-attention kernel — KV is written and attended through
   the table, prefix sharing is pure metadata, and no dense per-slot
   working cache exists.
+- ``HostSwapPool`` is the host swap tier below the device pool:
+  preempted requests swap their written pages out instead of discarding
+  them (readmission swaps them back in, no re-prefill), and cold prefix
+  pages evicted under pressure spill here so ``PrefixCache.match`` can
+  page them back in.
 
 Paging governs *admission* (prefix reuse), *capacity* (page accounting +
-preemption-on-OOM), and *sharing* (refcounts) on both pathways.
+preemption-on-OOM), *sharing* (refcounts), and *residency* (device vs
+host tier) on both pathways.
 """
 from __future__ import annotations
 
@@ -147,6 +153,8 @@ class PrefixStats:
     insertions: int = 0
     evictions: int = 0
     hit_tokens: int = 0
+    spills: int = 0      # cold pages copied to the host tier at eviction
+    restores: int = 0    # spilled pages paged back in on a match
 
     @property
     def hit_rate(self) -> float:
@@ -168,9 +176,36 @@ class PrefixCache:
         self.allocator = allocator
         self._map: OrderedDict[int, int] = OrderedDict()  # chain hash -> bid
         self.stats = PrefixStats()
+        # cold-page spill tier (armed via attach_spill): hash -> host id,
+        # LRU order.  Spilled pages hold host storage only — no device page.
+        self._spilled: OrderedDict[int, int] = OrderedDict()
+        self._spill_cap = 0
+        self._spill_out = None   # bid -> host id | None
+        self._page_in = None     # host id -> device bid | None
+        self._drop = None        # host id -> None
 
     def __len__(self) -> int:
         return len(self._map)
+
+    @property
+    def spilled(self) -> int:
+        """Spilled (host-resident) page count."""
+        return len(self._spilled)
+
+    def attach_spill(self, *, spill_out, page_in, drop,
+                     capacity: int) -> None:
+        """Arm the cold-page spill tier.
+
+        ``spill_out(bid)`` copies a device page's rows to host storage and
+        returns a host id (None = tier full, the page is simply dropped);
+        ``page_in(host_id)`` allocates a device page, copies the rows back
+        and returns the new bid with one reference — the cache's own —
+        (None = no device page free, the match stops there); ``drop``
+        releases host storage.  ``capacity`` bounds the spilled set,
+        oldest entries dropped first.
+        """
+        self._spill_out, self._page_in, self._drop = spill_out, page_in, drop
+        self._spill_cap = capacity
 
     # ------------------------------------------------------------- lookup
     def match(self, tokens: Sequence[int], *,
@@ -188,6 +223,8 @@ class PrefixCache:
             if max_tokens is not None and (len(bids) + 1) * bs > max_tokens:
                 break
             bid = self._map.get(h)
+            if bid is None:
+                bid = self._restore(h)
             if bid is None:
                 self.stats.miss_blocks += 1
                 break
@@ -211,6 +248,27 @@ class PrefixCache:
             n += bs
         return n
 
+    def _restore(self, h: int) -> int | None:
+        """Page a spilled entry back onto the device (None if impossible).
+
+        The restore consumes one free device page; the caller's admission
+        arithmetic stays consistent because the restored page joins the
+        match's shared list, reducing ``need`` by exactly the page the
+        restore consumed.  A failed page-in (device OOM) leaves the entry
+        spilled — the match simply stops at the resident prefix.
+        """
+        hid = self._spilled.get(h)
+        if hid is None or self._page_in is None:
+            return None
+        bid = self._page_in(hid)
+        if bid is None:
+            return None
+        del self._spilled[h]
+        self._drop(hid)           # the device copy is authoritative again
+        self._map[h] = bid        # page_in's reference becomes the cache's
+        self.stats.restores += 1
+        return bid
+
     def chains(self) -> tuple[int, ...]:
         """The resident chain hashes, LRU order (coldest first).  This is
         the cluster router's per-replica summary feed: a replica whose
@@ -228,6 +286,9 @@ class PrefixCache:
         registered — first writer wins, the loser keeps its private page."""
         if chain_hash in self._map:
             return False
+        stale = self._spilled.pop(chain_hash, None)
+        if stale is not None:     # fresh device copy supersedes the spill
+            self._drop(stale)
         self.allocator.incref(bid)
         self._map[chain_hash] = bid
         self.stats.insertions += 1
@@ -240,13 +301,24 @@ class PrefixCache:
 
     def evict(self, n_blocks: int) -> int:
         """Drop up to ``n_blocks`` pages held only by the cache, LRU first.
-        Returns how many were reclaimed."""
+        Returns how many were reclaimed.  With a spill tier attached the
+        cold page's rows are copied to host storage first, so a later
+        ``match`` on its chain hash can page it back in instead of
+        re-prefilling."""
         reclaimed = 0
         for h in list(self._map):
             if reclaimed >= n_blocks:
                 break
             bid = self._map[h]
             if self.allocator.refcount(bid) == 1:
+                if self._spill_out is not None:
+                    hid = self._spill_out(bid)
+                    if hid is not None:
+                        self._spilled[h] = hid
+                        self.stats.spills += 1
+                        while len(self._spilled) > self._spill_cap:
+                            _, old = self._spilled.popitem(last=False)
+                            self._drop(old)
                 del self._map[h]
                 self.allocator.decref(bid)
                 self.stats.evictions += 1
@@ -286,6 +358,97 @@ class KVPool:
         n = idx.shape[0] * self.block_size
         return (k.reshape(k.shape[0], n, *k.shape[3:]),
                 v.reshape(v.shape[0], n, *v.shape[3:]))
+
+
+@dataclass
+class SwapStats:
+    swap_out_pages: int = 0   # pages copied device -> host
+    swap_in_pages: int = 0    # pages copied host -> device
+    dropped_pages: int = 0    # host pages released without a swap-in
+    peak_in_use: int = 0
+
+
+class HostSwapPool:
+    """Host-memory swap tier for device KV pages.
+
+    The second rung of the KV memory hierarchy: preempted requests park
+    their written pages here instead of discarding them (readmission swaps
+    them back in, skipping the re-prefill), and cold prefix-cache pages
+    evicted under allocator pressure spill here so a later match can page
+    them in.  Storage is per-page ``(layers, block_size, kv, hd)`` numpy
+    copies keyed by a monotonically increasing host id; entries are
+    refcounted like device pages so the property tests can assert the
+    tier never leaks.
+
+    ``capacity`` bounds the resident page count; a full tier makes
+    ``put`` return ``None`` and the caller falls back to recompute — the
+    swap pathway degrades, it never breaks correctness.
+    """
+
+    def __init__(self, capacity: int | None, block_size: int):
+        if capacity is not None and capacity < 0:
+            # capacity 0 is legal: an always-full tier, every put declined
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self.block_size = block_size
+        self._store: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._ref: dict[int, int] = {}
+        self._next = 0
+        self.stats = SwapStats()
+
+    # ------------------------------------------------------------ queries
+    @property
+    def in_use(self) -> int:
+        return len(self._store)
+
+    def refcount(self, hid: int) -> int:
+        return self._ref.get(hid, 0)
+
+    # ---------------------------------------------------------- lifecycle
+    def put(self, k_rows: np.ndarray, v_rows: np.ndarray) -> int | None:
+        """Store one page of KV rows; returns its host id with refcount 1,
+        or ``None`` when the tier is at capacity."""
+        if self.capacity is not None and len(self._store) >= self.capacity:
+            return None
+        hid = self._next
+        self._next += 1
+        self._store[hid] = (np.array(k_rows, copy=True),
+                            np.array(v_rows, copy=True))
+        self._ref[hid] = 1
+        self.stats.swap_out_pages += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return hid
+
+    def get(self, hid: int) -> tuple[np.ndarray, np.ndarray]:
+        if hid not in self._store:
+            raise BlockAllocatorError(f"get of unknown host page {hid}")
+        return self._store[hid]
+
+    def incref(self, hid: int) -> None:
+        if hid not in self._ref:
+            raise BlockAllocatorError(f"incref on unknown host page {hid}")
+        self._ref[hid] += 1
+
+    def decref(self, hid: int, *, swapped_in: bool = False) -> None:
+        ref = self._ref.get(hid)
+        if ref is None:
+            raise BlockAllocatorError(f"free of unknown host page {hid}")
+        self._ref[hid] = ref - 1
+        if self._ref[hid] == 0:
+            del self._ref[hid]
+            del self._store[hid]
+            if swapped_in:
+                self.stats.swap_in_pages += 1
+            else:
+                self.stats.dropped_pages += 1
+
+    def check(self) -> None:
+        """Invariant audit: storage and refcounts cover the same ids, all
+        refcounts positive, capacity respected."""
+        assert set(self._store) == set(self._ref)
+        assert all(r >= 1 for r in self._ref.values())
+        if self.capacity is not None:
+            assert len(self._store) <= self.capacity
 
 
 class DevicePageView:

@@ -17,9 +17,12 @@ Policy
   of *strictly lower* priority (lowest priority first, most recently
   submitted first — the cheapest recompute), reclaiming their slot and
   pages.  Preempted entries return to the waiting queue keeping their
-  original submission order and are *recomputed* on readmission (the
-  engine re-prefills prompt + generated-so-far; under greedy decoding the
-  final stream is identical to an uninterrupted run).
+  original submission order.  On readmission the engine picks the cheaper
+  of two equivalent pathways via ``SwapCostModel``: swap the victim's
+  host-parked pages back in, or re-prefill prompt + generated-so-far
+  (recompute).  Both yield the token stream of an uninterrupted run —
+  greedy decoding is deterministic and sampling keys on
+  ``(seed, rid, step)``.
 """
 from __future__ import annotations
 
@@ -54,6 +57,39 @@ class SchedEntry:
 class Plan:
     admit: list[SchedEntry] = field(default_factory=list)
     preempt: list[SchedEntry] = field(default_factory=list)
+    # victim attribution: cand.seq -> the victims picked *for that
+    # candidate*.  The engine commits a candidate's preemptions only when
+    # its admission actually goes through, so an intra-tick evictability
+    # race cannot flush running work for nothing.  ``preempt`` stays the
+    # flat aggregate (same entries, plan order).
+    victims: dict[int, list[SchedEntry]] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class SwapCostModel:
+    """Prices a preempted entry's two readmission pathways in a common
+    unit (token-recompute equivalents).
+
+    Restoring swapped pages costs a per-page transfer constant — the
+    host->device copy latency expressed in how many tokens could have
+    been prefilled in the same time.  Recomputing costs one unit per
+    previously-computed token re-prefilled.  Swap wins whenever the
+    transfer is cheaper than the prefill it replaces, which for any
+    reasonable block size is almost always — except degenerate victims
+    preempted with under ``swap_cost_per_page`` tokens written, where
+    recompute is genuinely cheaper than the copy.
+    """
+    swap_cost_per_page: float = 2.0
+    recompute_cost_per_token: float = 1.0
+
+    def restore_cost(self, pages: int) -> float:
+        return self.swap_cost_per_page * pages
+
+    def recompute_cost(self, tokens: int) -> float:
+        return self.recompute_cost_per_token * tokens
+
+    def prefer_swap(self, pages: int, tokens: int) -> bool:
+        return self.restore_cost(pages) <= self.recompute_cost(tokens)
 
 
 @dataclass
@@ -132,6 +168,8 @@ class Scheduler:
                 pages_if += v.held_pages
             if slots_if > 0 and pages_if >= need:
                 plan.preempt.extend(picked)
+                if picked:
+                    plan.victims[cand.seq] = picked
                 plan.admit.append(cand)
                 free_slots, free_pages = slots_if - 1, pages_if - need
             else:

@@ -403,15 +403,15 @@ def test_ledger_orphan_audit_flags_unowned_bench_files(tmp_path):
     assert led.audit_owned(["serve_throughput_smoke"]) == []
 
     # a stray ledger from a deleted benchmark
-    led.compare("serve_tiering_smoke", {"y": 2.0}, [MetricSpec("y")])
+    led.compare("serve_retired_smoke", {"y": 2.0}, [MetricSpec("y")])
     [f] = led.audit_owned(["serve_throughput_smoke"])
     assert f["kind"] == "ledger-orphan" and f["severity"] == "error"
-    assert "serve_tiering_smoke" in f["detail"]
+    assert "serve_retired_smoke" in f["detail"]
 
     # unparseable files are judged by filename, not skipped
     (tmp_path / "BENCH_mystery.json").write_text("{not json")
     kinds = [f["kind"] for f in led.audit_owned(["serve_throughput_smoke",
-                                                 "serve_tiering_smoke"])]
+                                                 "serve_retired_smoke"])]
     assert kinds == ["ledger-orphan"]
 
 
@@ -441,7 +441,7 @@ def test_smoke_all_gate_fails_on_orphan_ledger(tmp_path):
     diag.extend(led.audit_owned(owned), source="ledger-integrity")
     assert diag.gate()
 
-    led.compare("serve_tiering_smoke", {"y": 1.0}, [MetricSpec("y")])
+    led.compare("serve_retired_smoke", {"y": 1.0}, [MetricSpec("y")])
     diag = Diagnostics()
     diag.extend(led.audit_owned(owned), source="ledger-integrity")
     assert not diag.gate()

@@ -151,6 +151,73 @@ def test_never_preempts_equal_or_higher_priority():
     assert run.state == RUNNING
 
 
+def test_plan_attributes_victims_to_their_candidate():
+    """``Plan.victims`` maps each admitted candidate to the victims whose
+    pages buy that specific admission, so the engine can commit each
+    preemption only when its candidate's admission succeeds."""
+    sched, _ = _sched(slots=2)
+    v1 = sched.submit("v1", priority=0)
+    v2 = sched.submit("v2", priority=0)
+    for e, slot in ((v1, 0), (v2, 1)):
+        sched.mark_running(e, slot=slot, held_pages=2)
+    hi1 = sched.submit("hi1", priority=5)
+    hi2 = sched.submit("hi2", priority=4)
+    plan = sched.schedule(free_slots=0, free_pages=0, cost_fn=lambda e: 2)
+    assert plan.admit == [hi1, hi2]
+    assert plan.preempt == [v2, v1]           # aggregate order preserved
+    assert plan.victims == {hi1.seq: [v2], hi2.seq: [v1]}
+    # a candidate admitted without victims gets no entry
+    sched2, _ = _sched(slots=1)
+    only = sched2.submit("only")
+    plan2 = sched2.schedule(free_slots=1, free_pages=4, cost_fn=lambda e: 1)
+    assert plan2.admit == [only] and plan2.victims == {}
+
+
+def test_failed_admission_commits_no_preemption():
+    """The engine's commit-on-success contract: when the exact budget
+    check inside ``_admit`` fails (pages consumed intra-tick that the
+    plan could not see), NO victim is preempted — running work is never
+    flushed for an admission that does not happen."""
+    from repro.configs import ALL_ARCHS, reduced
+    from repro.models import build
+    from repro.serve.engine import PagedServeEngine, Request
+
+    cfg = reduced(ALL_ARCHS["deepseek-7b"])
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    eng = PagedServeEngine(model, params, slots=1, max_len=64, block_size=4,
+                           num_blocks=10, chunk=4)
+    lo = eng.submit(Request(rid=0, prompt=rng.integers(0, 40, 12).tolist(),
+                            max_new=16, priority=0), arrival=0.0)
+    for _ in range(4):                        # prefill done, decoding
+        eng.step()
+    assert lo.entry.state == RUNNING and lo.entry.held_pages == 7
+    hi = eng.submit(Request(rid=1, prompt=rng.integers(40, 80, 20).tolist(),
+                            max_new=12, priority=5))    # needs 8 pages
+
+    # simulate intra-tick consumption: pin every free page so the
+    # victim's 7 pages alone cannot cover the candidate's 8
+    pins = [eng.alloc.alloc() for _ in range(eng.alloc.num_free)]
+    retries_before = eng.pstats.admit_retries
+    assert not eng._admit(hi.entry, (lo.entry,))
+    assert eng.sched.stats.preemptions == 0   # victim untouched
+    assert lo.entry.state == RUNNING and hi.entry.state == WAITING
+    assert eng.pstats.admit_retries == retries_before + 1
+
+    # with the pins released the same admission succeeds and the victim
+    # is preempted exactly once, inside the successful _admit
+    for bid in pins:
+        eng.alloc.decref(bid)
+    assert eng._admit(hi.entry, (lo.entry,))
+    assert eng.sched.stats.preemptions == 1
+    assert lo.entry.state == PREEMPTED and hi.entry.state == RUNNING
+    eng.drain()
+    assert len(lo.req.out) == 16 and len(hi.req.out) == 12
+    eng.alloc.check()
+    eng.host.check()
+
+
 def test_preempted_entry_resumes_before_later_arrivals():
     """A preempted request keeps its submission order: it readmits ahead
     of same-priority requests submitted after it."""

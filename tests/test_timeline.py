@@ -293,6 +293,38 @@ def test_shares_sum_to_exactly_one_across_engines(served, spec_idx):
 
 
 @pytest.mark.slow
+def test_cancel_of_preempted_request_reports_preempted_phase(served):
+    """Regression: cancelling a PREEMPTED entry used to emit
+    ``phase="waiting"``, collapsing the eviction gap into queue_wait.
+    The engine must report ``phase="preempted"`` so the timeline closes
+    the preempted span at the cancel tick."""
+    _, model, params = served
+    tr = Tracer()
+    eng = PagedServeEngine(model, params, tracer=tr, slots=1, max_len=64,
+                           block_size=4, num_blocks=10, chunk=4)
+    lo = eng.submit(Request(rid=0, prompt=list(range(2, 14)), max_new=16,
+                            priority=0), arrival=0.0)
+    for _ in range(4):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=list(range(20, 28)), max_new=6,
+                       priority=5))
+    eng.step()                                    # hi preempts lo
+    assert lo.entry.state == "preempted"
+    eng.step()                                    # let the gap have width
+    assert lo.cancel()
+    [ev] = tr.events("cancel")
+    assert ev.data["rid"] == 0 and ev.data["phase"] == "preempted"
+    eng.drain()
+    tls = build_timelines(tr)
+    assert tls[0].outcome == "cancelled" and tls[0].preemptions == 1
+    last = tls[0].spans[-1]
+    assert last.phase == "preempted"              # gap attributed correctly
+    assert last.end == tls[0].end
+    assert sum(tls[0].shares().values()) == 1
+    assert tls[1].outcome == "finished"
+
+
+@pytest.mark.slow
 def test_cancel_and_preempt_paths_stay_exact(served):
     _, model, params = served
     tr = Tracer()
